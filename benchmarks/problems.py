@@ -1,0 +1,19 @@
+"""Shared problem definitions for the paper-experiment benchmarks (§6)."""
+import jax.numpy as jnp
+
+
+def logistic_loss(w, X, y):
+    """Eq. (8): regularized logistic regression (λ/2n scaling as in paper)."""
+    z = X @ w
+    yy = 2.0 * y - 1.0
+    return jnp.mean(jnp.log1p(jnp.exp(-yy * z))) + 0.5 / X.shape[0] * (w @ w)
+
+
+def robust_regression_loss(w, X, y):
+    """Eq. (9): non-convex robust linear regression."""
+    r = y - X @ w
+    return jnp.mean(jnp.log(r * r / 2.0 + 1.0))
+
+
+def accuracy(w, X, y):
+    return float(((X @ w > 0) == (y > 0.5)).mean())

@@ -1,0 +1,45 @@
+"""All four §6 attacks, robust (norm-trim) vs naive (mean) aggregation —
+the contrast that motivates the paper — on the non-convex robust-regression
+objective (Eq. 9).
+
+    PYTHONPATH=src python examples/byzantine_attacks.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import AttackConfig, DistributedCubicNewton, NewtonConfig
+from repro.data import make_regression, shard_to_workers
+
+
+def robust_regression_loss(w, X, y):
+    r = y - X @ w
+    return jnp.mean(jnp.log(r * r / 2.0 + 1.0))
+
+
+def main():
+    m, alpha, T = 20, 0.2, 12
+    X, y, w_star = make_regression(jax.random.PRNGKey(1), 8000, 40)
+    Xw, yw = shard_to_workers(X, y, m)
+    w0 = jnp.zeros(40)
+
+    print(f"{'attack':>15s} | {'naive mean':>12s} | {'norm-trim':>12s} | param err")
+    print("-" * 64)
+    for attack in ("gaussian", "negative", "flipped_label", "random_label"):
+        atk = AttackConfig(name=attack, alpha=alpha, sigma=50.0, num_classes=2)
+        naive = DistributedCubicNewton(
+            robust_regression_loss, NewtonConfig(M=10.0, beta=0.0), atk
+        )
+        robust = DistributedCubicNewton(
+            robust_regression_loss,
+            NewtonConfig(M=10.0, beta=alpha + 2.0 / m),
+            atk,
+        )
+        _, h_naive = naive.run(w0, Xw, yw, T)
+        w_r, h_rob = robust.run(w0, Xw, yw, T)
+        err = float(jnp.linalg.norm(w_r - w_star) / jnp.linalg.norm(w_star))
+        print(f"{attack:>15s} | {h_naive['loss'][-1]:12.4f} | "
+              f"{h_rob['loss'][-1]:12.4f} | {err:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + greedy decode through the KV-cache
+path (the decode_32k / long_500k dry-run shapes exercise this same code).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b --gen 48
+"""
+import argparse
+
+from repro.launch.serve import run_serving
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    run_serving(args.arch, "smoke", args.batch, args.prompt_len, args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Pytree checkpointing: flat-key .npz + json metadata.
+
+Device-agnostic (arrays are pulled to host), restartable mid-run, and
+round-trips arbitrary nested dict pytrees — enough substrate for the train
+driver without an external dependency.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{i}{_SEP}"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # numpy .npz can't round-trip ml_dtypes (bfloat16 etc.) — store
+            # as fp32 (lossless for bf16); load_checkpoint casts back.
+            arr = arr.astype(np.float32)
+        out[prefix.rstrip(_SEP)] = arr
+    return out
+
+
+def save_checkpoint(path: str, params: Any, step: int, extra: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(jax.device_get(params))
+    np.savez(os.path.join(path, f"step_{step:08d}.npz"), **flat)
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(f[len("step_") : -len(".npz")])
+        for f in os.listdir(path)
+        if f.startswith("step_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, like: Any, step: int | None = None):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    data = np.load(os.path.join(path, f"step_{step:08d}.npz"))
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}{_SEP}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}__{i}{_SEP}") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        arr = data[prefix.rstrip(_SEP)]
+        return jax.numpy.asarray(arr, dtype=tree.dtype)
+
+    return rebuild(like), step

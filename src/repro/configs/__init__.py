@@ -1,0 +1,50 @@
+"""Config registry: ``get_config("<arch>")`` / ``--arch <id>``."""
+from .base import INPUT_SHAPES, InputShape, ModelConfig
+from .codeqwen15_7b import CONFIG as CODEQWEN15_7B
+from .deepseek_moe_16b import CONFIG as DEEPSEEK_MOE_16B
+from .gemma3_27b import CONFIG as GEMMA3_27B
+from .internlm2_20b import CONFIG as INTERNLM2_20B
+from .internvl2_76b import CONFIG as INTERNVL2_76B
+from .llama3_405b import CONFIG as LLAMA3_405B, VARIANT_SWA as LLAMA3_405B_SWA
+from .mamba2_780m import CONFIG as MAMBA2_780M
+from .paper_workloads import PAPER_WORKLOADS, PaperWorkload
+from .phi35_moe import CONFIG as PHI35_MOE
+from .recurrentgemma_9b import CONFIG as RECURRENTGEMMA_9B
+from .whisper_medium import CONFIG as WHISPER_MEDIUM
+
+ARCHS = {
+    c.name: c
+    for c in (
+        MAMBA2_780M,
+        INTERNVL2_76B,
+        LLAMA3_405B,
+        CODEQWEN15_7B,
+        INTERNLM2_20B,
+        WHISPER_MEDIUM,
+        RECURRENTGEMMA_9B,
+        DEEPSEEK_MOE_16B,
+        GEMMA3_27B,
+        PHI35_MOE,
+    )
+}
+VARIANTS = {LLAMA3_405B_SWA.name: LLAMA3_405B_SWA}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in ARCHS:
+        return ARCHS[name]
+    if name in VARIANTS:
+        return VARIANTS[name]
+    raise KeyError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+
+
+__all__ = [
+    "ARCHS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "PAPER_WORKLOADS",
+    "PaperWorkload",
+    "VARIANTS",
+    "get_config",
+]

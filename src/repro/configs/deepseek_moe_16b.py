@@ -1,0 +1,23 @@
+"""deepseek-moe-16b — fine-grained MoE [arXiv:2401.06066].
+
+28L, d_model=2048, 16 heads (kv=16), vocab=102400.  Experts: 64 routed
+(top-6) + 2 shared, expert d_ff=1408 (fine-grained segmentation).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,             # routed-expert hidden size (assignment spec)
+    expert_d_ff=1408,
+    vocab_size=102400,
+    num_experts=64,
+    num_shared_experts=2,
+    top_k=6,
+    source="DeepSeekMoE [arXiv:2401.06066]",
+)

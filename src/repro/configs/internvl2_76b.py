@@ -1,0 +1,23 @@
+"""internvl2-76b — InternViT-6B (stub) + LLaMA-backbone LM [arXiv:2404.16821].
+
+Backbone: 80L, d_model=8192, 64 heads (GQA kv=8), d_ff=28672,
+vocab=128256.  The vision tower + MLP projector are a STUB per the brief:
+``input_specs`` supplies 1024 precomputed patch embeddings at d_model (one
+high-res tile's worth after pixel-shuffle), consumed through a learned
+projector inside the model.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    num_prefix_tokens=1024,
+    source="InternVL2 [arXiv:2404.16821]",
+)

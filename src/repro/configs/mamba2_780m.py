@@ -1,0 +1,23 @@
+"""mamba2-780m — SSD (state-space duality) [arXiv:2405.21060].
+
+48L, d_model=1536, attention-free (d_ff=0: the SSD mixer is the whole
+block), vocab=50280 (GPT-NeoX tokenizer), ssm_state=128, expand=2,
+head_dim=64 ⇒ 48 SSD heads.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=1,       # unused: attention-free
+    num_kv_heads=1,
+    d_ff=0,            # no MLP — SSD mixer only (per assignment: d_ff=0)
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=128,
+    source="SSD / Mamba-2 [arXiv:2405.21060]",
+)

@@ -1,0 +1,23 @@
+"""phi3.5-moe-42b-a6.6b [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L, d_model=4096, 32 heads (GQA kv=8), vocab=32064.  16 experts, top-2,
+expert d_ff=6400.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    expert_d_ff=6400,
+    vocab_size=32064,
+    num_experts=16,
+    num_shared_experts=0,
+    top_k=2,
+    source="Phi-3.5-MoE [hf:microsoft/Phi-3.5-MoE-instruct]",
+)

@@ -1,0 +1,22 @@
+"""recurrentgemma-9b — Griffin: RG-LRU + local attention, 2:1 [arXiv:2402.19427].
+
+38L in repeating (recurrent, recurrent, local-attention) superblocks,
+d_model=4096, attention blocks: 16 heads MQA (kv=1, head_dim=256),
+window=2048, d_ff=12288, vocab=256000.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    window=2048,
+    hybrid_pattern="RRL",   # 2 RG-LRU : 1 local-attn (L uses cfg.window)
+    source="RecurrentGemma / Griffin [arXiv:2402.19427]",
+)

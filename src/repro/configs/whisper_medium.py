@@ -1,0 +1,23 @@
+"""whisper-medium [arXiv:2212.04356] — encoder-decoder, conv frontend STUB.
+
+24 encoder + 24 decoder layers, d_model=1024, 16 heads (MHA, kv=16),
+d_ff=4096, vocab=51865.  The mel-spectrogram + 2×conv frontend is a stub:
+``input_specs`` supplies 1500 precomputed frame embeddings (30 s of audio
+after 2× conv downsampling) at d_model.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,          # decoder layers
+    encoder_layers=24,
+    encoder_len=1500,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    source="Whisper [arXiv:2212.04356]",
+)

@@ -1,0 +1,66 @@
+"""Core — the paper's contribution.
+
+* :mod:`repro.core.cubic` — cubic sub-problem solvers (exact / Algorithm 2 /
+  matrix-free HVP).
+* :mod:`repro.core.aggregation` — norm-trim (the paper) + robust baselines.
+* :mod:`repro.core.attacks` — the four Byzantine attacks of §6 + saddle attack.
+* :mod:`repro.core.newton` — Algorithm 1, paper-faithful simulated cluster.
+* :mod:`repro.core.distributed` — Algorithm 1 at TPU-pod scale (vmap-of-grad
+  workers, HVP cubic solves, masked-all-reduce trimming).
+* :mod:`repro.core.byzantine_pgd` — ByzantinePGD [YCKB19] baseline.
+"""
+from .aggregation import (
+    AGGREGATORS,
+    coordinate_median,
+    krum,
+    mean,
+    norm_trim,
+    norm_trim_tree,
+    trimmed_mean,
+)
+from .attacks import ALL_ATTACKS, LABEL_ATTACKS, UPDATE_ATTACKS, byzantine_mask
+from .byzantine_pgd import ByzantinePGD, PGDConfig
+from .cubic import (
+    CubicParams,
+    cubic_model_value,
+    cubic_residual,
+    make_hvp,
+    solve_cubic_exact,
+    solve_cubic_gd,
+    solve_cubic_hvp,
+)
+from .distributed import (
+    DistributedNewtonConfig,
+    make_robust_sgd_step,
+    make_train_step,
+)
+from .newton import AttackConfig, DistributedCubicNewton, NewtonConfig
+
+__all__ = [
+    "AGGREGATORS",
+    "ALL_ATTACKS",
+    "AttackConfig",
+    "ByzantinePGD",
+    "CubicParams",
+    "DistributedCubicNewton",
+    "DistributedNewtonConfig",
+    "LABEL_ATTACKS",
+    "NewtonConfig",
+    "PGDConfig",
+    "UPDATE_ATTACKS",
+    "byzantine_mask",
+    "coordinate_median",
+    "cubic_model_value",
+    "cubic_residual",
+    "krum",
+    "make_hvp",
+    "make_robust_sgd_step",
+    "make_train_step",
+    "mean",
+    "norm_trim",
+    "norm_trim_tree",
+    "solve_cubic_exact",
+    "solve_cubic_gd",
+    "solve_cubic_hvp",
+    "trimmed_mean",
+]

@@ -1,0 +1,103 @@
+"""Robust aggregation rules at the center machine.
+
+The paper's rule (Algorithm 1, step 6) is **norm-based thresholding**: sort
+workers by ‖s_i‖, keep the smallest ``(1−β)m``, average the survivors.  We
+also implement the aggregators ByzantinePGD [YCKB19] uses (coordinate-wise
+median / trimmed mean) both as baselines and for the comparison harness, plus
+plain mean (non-robust reference).
+
+All aggregators take updates stacked on a leading worker axis:
+``updates: (m, d)`` (or a pytree whose leaves have a leading ``m`` axis for
+the tree variants) and return the aggregated ``(d,)`` update.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def mean(updates):
+    return jnp.mean(updates, axis=0)
+
+
+@partial(jax.jit, static_argnames=("beta",))
+def norm_trim(updates, beta: float):
+    """Paper's rule: keep the ``(1-beta)m`` smallest-norm updates, average.
+
+    Returns (aggregate, keep_mask).  Implemented with a rank threshold so it
+    jits with static shapes (no boolean gathering).
+    """
+    m = updates.shape[0]
+    n_keep = max(1, int(round((1.0 - beta) * m)))
+    norms = jnp.linalg.norm(updates.reshape(m, -1), axis=1)
+    # rank of each worker's norm (0 = smallest); ties broken by index order.
+    order = jnp.argsort(norms)
+    ranks = jnp.argsort(order)
+    keep = (ranks < n_keep).astype(updates.dtype)
+    agg = (keep[:, None] * updates.reshape(m, -1)).sum(0) / n_keep
+    return agg.reshape(updates.shape[1:]), keep
+
+
+def norm_trim_tree(updates_tree, beta: float):
+    """norm_trim on a pytree with a leading worker axis on every leaf."""
+    m = jax.tree_util.tree_leaves(updates_tree)[0].shape[0]
+    n_keep = max(1, int(round((1.0 - beta) * m)))
+    sq = jax.tree_util.tree_map(
+        lambda x: jnp.sum(x.reshape(m, -1).astype(jnp.float32) ** 2, axis=1),
+        updates_tree,
+    )
+    norms = jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq))
+    order = jnp.argsort(norms)
+    ranks = jnp.argsort(order)
+    keep = (ranks < n_keep).astype(jnp.float32)
+
+    def agg_leaf(x):
+        w = keep.reshape((m,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return (w * x).sum(0) / n_keep
+
+    return jax.tree_util.tree_map(agg_leaf, updates_tree), keep
+
+
+def coordinate_median(updates):
+    """Coordinate-wise median (ByzantinePGD option)."""
+    return jnp.median(updates, axis=0)
+
+
+@partial(jax.jit, static_argnames=("trim_frac",))
+def trimmed_mean(updates, trim_frac: float):
+    """Coordinate-wise trimmed mean: drop the top/bottom ``trim_frac``·m
+    values per coordinate, average the rest (ByzantinePGD's default)."""
+    m = updates.shape[0]
+    k = int(round(trim_frac * m))
+    k = min(k, (m - 1) // 2)
+    srt = jnp.sort(updates, axis=0)
+    if k == 0:
+        return srt.mean(0)
+    return srt[k : m - k].mean(0)
+
+
+@partial(jax.jit, static_argnames=("n_byz",))
+def krum(updates, n_byz: int):
+    """Krum [BMGS17]: select the single update whose summed squared distance
+    to its m−f−2 nearest neighbours is smallest.  Quadratic in m — included
+    as the classic baseline the paper's O(m log m) norm sort improves on."""
+    m = updates.shape[0]
+    flat = updates.reshape(m, -1)
+    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    k = max(m - n_byz - 2, 1)
+    # distance to k nearest others (exclude self-distance 0 via large diag)
+    d2 = d2 + jnp.eye(m) * 1e30
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    scores = nearest.sum(1)
+    return updates[jnp.argmin(scores)]
+
+
+AGGREGATORS = {
+    "mean": lambda u, **kw: mean(u),
+    "norm_trim": lambda u, beta=0.2, **kw: norm_trim(u, beta)[0],
+    "coordinate_median": lambda u, **kw: coordinate_median(u),
+    "trimmed_mean": lambda u, trim_frac=0.2, **kw: trimmed_mean(u, trim_frac),
+    "krum": lambda u, n_byz=2, **kw: krum(u, n_byz),
+}

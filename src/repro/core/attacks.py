@@ -1,0 +1,90 @@
+"""Byzantine attack library (the four attacks of the paper's §6).
+
+Two families:
+
+* **update-level** — corrupt the update ``s_i`` a Byzantine worker sends:
+  - ``gaussian``:  s_i + N(0, σ²)            (Gaussian-noise attack)
+  - ``negative``:  −c · s_i, c ∈ (0,1)        (negative-update attack)
+* **data-level** — corrupt the worker's *labels* before it computes its
+  gradient/Hessian and solves the sub-problem:
+  - ``random_label``: train on uniformly random labels
+  - ``flipped_label``: train on 1−y (binary) / permuted labels
+
+Attacked worker indices are a static boolean mask so experiments are
+reproducible and the distributed step stays shape-static.  A fifth,
+``saddle``, implements the *saddle-point attack* the paper is designed to
+resist: colluding workers send a common vector that pulls the iterate toward
+a saddle direction (the negative-curvature eigenvector scaled up).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def byzantine_mask(m: int, alpha: float) -> jnp.ndarray:
+    """First ⌊αm⌋ workers are Byzantine (deterministic, as in the paper's
+    experiments where the fraction — not the identity — matters)."""
+    n_byz = int(alpha * m)
+    return jnp.arange(m) < n_byz
+
+
+# -------------------- update-level attacks: (m,d) -> (m,d) -----------------
+
+
+def gaussian_attack(key, updates, mask, sigma=10.0):
+    noise = sigma * jax.random.normal(key, updates.shape, updates.dtype)
+    return jnp.where(mask.reshape((-1,) + (1,) * (updates.ndim - 1)), updates + noise, updates)
+
+
+def negative_update_attack(key, updates, mask, c=0.9):
+    del key
+    return jnp.where(
+        mask.reshape((-1,) + (1,) * (updates.ndim - 1)), -c * updates, updates
+    )
+
+
+def saddle_attack(key, updates, mask, direction=None, scale=5.0):
+    """Colluding workers all send ``scale · direction`` — a fake descent
+    direction toward a saddle (fake-local-minimum construction of §5)."""
+    m = updates.shape[0]
+    if direction is None:
+        direction = jax.random.normal(key, updates.shape[1:], updates.dtype)
+        direction = direction / (jnp.linalg.norm(direction) + 1e-12)
+    fake = jnp.broadcast_to(scale * direction, updates.shape)
+    return jnp.where(mask.reshape((-1,) + (1,) * (updates.ndim - 1)), fake, updates)
+
+
+UPDATE_ATTACKS: dict[str, Callable] = {
+    "none": lambda key, u, mask, **kw: u,
+    "gaussian": gaussian_attack,
+    "negative": negative_update_attack,
+    "saddle": saddle_attack,
+}
+
+
+# -------------------- data-level attacks: labels (m, n) -> (m, n) ----------
+
+
+def random_label_attack(key, labels, mask, num_classes=2):
+    rnd = jax.random.randint(key, labels.shape, 0, num_classes).astype(labels.dtype)
+    return jnp.where(mask.reshape((-1,) + (1,) * (labels.ndim - 1)), rnd, labels)
+
+
+def flipped_label_attack(key, labels, mask, num_classes=2):
+    del key
+    flipped = (num_classes - 1) - labels
+    return jnp.where(
+        mask.reshape((-1,) + (1,) * (labels.ndim - 1)), flipped, labels
+    )
+
+
+LABEL_ATTACKS: dict[str, Callable] = {
+    "none": lambda key, y, mask, **kw: y,
+    "random_label": random_label_attack,
+    "flipped_label": flipped_label_attack,
+}
+
+ALL_ATTACKS = ("gaussian", "negative", "random_label", "flipped_label")

@@ -1,0 +1,68 @@
+"""Pytree vector-space helpers used throughout the cubic-Newton core.
+
+The paper operates on parameter vectors ``x ∈ R^d``.  For the large assigned
+architectures the parameter is a pytree; these helpers give the handful of
+vector-space operations (axpy, dot, norm, zeros-like) the algorithms need,
+with semantics identical to flattening the tree into one ``d``-vector.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, c):
+    return jax.tree_util.tree_map(lambda x: x * c, a)
+
+
+def tree_axpy(c, x, y):
+    """y + c * x (the BLAS axpy), elementwise over the tree."""
+    return jax.tree_util.tree_map(lambda xi, yi: yi + c * xi, x, y)
+
+
+def tree_dot(a, b):
+    """<a, b> as if both trees were flattened to d-vectors (fp32 accumulate)."""
+    leaves = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_sqnorm(a):
+    return tree_dot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sqnorm(a))
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_randn_like(key, a, scale=1.0):
+    """Gaussian tree with the same structure/shapes/dtypes as ``a``."""
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    keys = jax.random.split(key, len(leaves))
+    out = [
+        (scale * jax.random.normal(k, x.shape)).astype(x.dtype)
+        for k, x in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_size(a):
+    """Total number of scalar parameters d."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), a)

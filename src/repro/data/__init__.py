@@ -1,0 +1,17 @@
+from .pipeline import WorkerBatcher
+from .synthetic import (
+    TokenStream,
+    make_classification,
+    make_regression,
+    paper_dataset,
+    shard_to_workers,
+)
+
+__all__ = [
+    "TokenStream",
+    "WorkerBatcher",
+    "make_classification",
+    "make_regression",
+    "paper_dataset",
+    "shard_to_workers",
+]

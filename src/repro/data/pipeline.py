@@ -1,0 +1,52 @@
+"""Sharded batching pipeline: worker-major batches for the Newton step.
+
+``WorkerBatcher`` produces batches whose leaves carry the ``(m_workers,
+per_worker_batch, …)`` layout that :func:`repro.core.distributed.make_train_step`
+expects, plus the modality stubs (prefix/frame embeddings) the VLM/audio
+architectures need.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .synthetic import TokenStream
+
+
+class WorkerBatcher:
+    def __init__(self, cfg, m_workers: int, global_batch: int, seq_len: int, seed=0):
+        assert global_batch % m_workers == 0, (global_batch, m_workers)
+        self.cfg = cfg
+        self.m = m_workers
+        self.per_worker = global_batch // m_workers
+        self.seq_len = seq_len
+        self.stream = TokenStream(cfg.vocab_size, seed)
+        self.seed = seed
+
+    def text_len(self):
+        if self.cfg.family == "vlm":
+            return self.seq_len - self.cfg.num_prefix_tokens
+        return self.seq_len
+
+    def __call__(self, step: int):
+        B = self.m * self.per_worker
+        toks, targets = self.stream.batch(step, B, self.text_len())
+        batch = {
+            "tokens": toks.reshape(self.m, self.per_worker, -1),
+            "targets": targets.reshape(self.m, self.per_worker, -1),
+        }
+        if self.cfg.family == "vlm":
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 7), step)
+            batch["prefix_emb"] = jax.random.normal(
+                key,
+                (self.m, self.per_worker, self.cfg.num_prefix_tokens, self.cfg.d_model),
+                jnp.float32,
+            )
+        if self.cfg.family == "audio":
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 13), step)
+            batch["enc_emb"] = jax.random.normal(
+                key,
+                (self.m, self.per_worker, self.cfg.encoder_len, self.cfg.d_model),
+                jnp.float32,
+            )
+        return batch

@@ -1,0 +1,102 @@
+"""Synthetic data generators.
+
+* LIBSVM twins (paper experiments): binary classification matched to the
+  published a9a / w8a shapes, from a ground-truth separator + label noise —
+  the offline stand-in justified in DESIGN.md §6/§8.
+* Robust-regression data with heavy-tailed outliers (the non-convex loss of
+  the paper's Eq. (9) is exactly built for this).
+* Token streams for the LM architectures (Zipf-distributed with Markov
+  structure so the loss has signal to descend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_classification(key, n, d, *, label_noise=0.05, margin=1.0):
+    """Linear-separator binary data: X (n,d), y∈{0,1} (n,)."""
+    kx, kw, kn = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (n, d))
+    w_star = margin * jax.random.normal(kw, (d,)) / jnp.sqrt(d)
+    p = jax.nn.sigmoid(X @ w_star / 0.5)
+    y = (jax.random.uniform(kn, (n,)) < p).astype(jnp.float32)
+    flip = jax.random.uniform(jax.random.fold_in(kn, 1), (n,)) < label_noise
+    y = jnp.where(flip, 1.0 - y, y)
+    return X, y, w_star
+
+
+def make_regression(key, n, d, *, noise=0.1, outlier_frac=0.1, outlier_scale=10.0):
+    """Linear data with heavy-tailed outliers (robust-regression target)."""
+    kx, kw, kn, ko, km = jax.random.split(key, 5)
+    X = jax.random.normal(kx, (n, d))
+    w_star = jax.random.normal(kw, (d,)) / jnp.sqrt(d)
+    y = X @ w_star + noise * jax.random.normal(kn, (n,))
+    out_mask = jax.random.uniform(km, (n,)) < outlier_frac
+    y = jnp.where(out_mask, y + outlier_scale * jax.random.normal(ko, (n,)), y)
+    return X, y, w_star
+
+
+def shard_to_workers(X, y, m):
+    """Split pooled (n, …) data into m worker shards: (m, n/m, …)."""
+    n = (X.shape[0] // m) * m
+    return (
+        X[:n].reshape(m, n // m, *X.shape[1:]),
+        y[:n].reshape(m, n // m, *y.shape[1:]),
+    )
+
+
+def paper_dataset(workload, seed=0):
+    """Build the train/test twin of a paper workload (see configs)."""
+    key = jax.random.PRNGKey(seed)
+    ktr, kte = jax.random.split(key)
+    if workload.problem == "logistic":
+        Xtr, ytr, w_star = make_classification(ktr, workload.n_train, workload.dim)
+        Xte, yte, _ = make_classification(kte, workload.n_test, workload.dim)
+        # re-label test with the same separator for a consistent task
+        p = jax.nn.sigmoid(Xte @ w_star / 0.5)
+        yte = (p > 0.5).astype(jnp.float32)
+    else:
+        Xtr, ytr, w_star = make_regression(ktr, workload.n_train, workload.dim)
+        Xte, yte, _ = make_regression(kte, workload.n_test, workload.dim, outlier_frac=0.0)
+    Xm, ym = shard_to_workers(Xtr, ytr, workload.m_workers)
+    return {
+        "X_workers": Xm,
+        "y_workers": ym,
+        "X_train": Xtr,
+        "y_train": ytr,
+        "X_test": Xte,
+        "y_test": yte,
+        "w_star": w_star,
+    }
+
+
+# ----------------------------- LM token streams ---------------------------
+
+
+class TokenStream:
+    """Zipf+Markov synthetic token source.  Deterministic per (seed, step)."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, zipf_a: float = 1.2):
+        self.vocab = vocab_size
+        self.seed = seed
+        # modest working vocab so bigram structure is learnable
+        self.active = min(vocab_size, 4096)
+        rng = np.random.default_rng(seed)
+        self._shift = rng.integers(1, self.active - 1)
+        ranks = np.arange(1, self.active + 1, dtype=np.float64)
+        p = ranks ** (-zipf_a)
+        self._probs = jnp.asarray(p / p.sum(), jnp.float32)
+
+    def batch(self, step: int, batch_size: int, seq_len: int):
+        """tokens, targets: (batch, seq)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        base = jax.random.choice(
+            key, self.active, (batch_size, seq_len + 1), p=self._probs
+        )
+        # inject a deterministic bigram: even positions predict a shifted copy
+        idx = jnp.arange(seq_len + 1)
+        shifted = (jnp.roll(base, 1, axis=1) + self._shift) % self.active
+        toks = jnp.where((idx % 2 == 1)[None, :], shifted, base).astype(jnp.int32)
+        return toks[:, :-1], toks[:, 1:]

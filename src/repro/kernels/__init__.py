@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §2):
+
+* :mod:`flash_attention` — online-softmax attention, causal + sliding window
+  (the prefill/train hot loop of every attention arch).
+* :mod:`cubic_step` — fused Algorithm-2 inner iteration for the paper's
+  explicit-Hessian regime (the solver hot loop of the reproduction).
+* :mod:`rmsnorm` — row-tiled RMSNorm.
+
+Each has a pure-jnp oracle in :mod:`ref` and a jit wrapper in :mod:`ops`;
+kernels run interpret=True off-TPU.
+"""
+from .ops import (
+    attention_bshd,
+    cubic_solve_fused,
+    cubic_step,
+    flash_attention,
+    rmsnorm,
+    rmsnorm_nd,
+)
+
+__all__ = [
+    "attention_bshd",
+    "cubic_solve_fused",
+    "cubic_step",
+    "flash_attention",
+    "rmsnorm",
+    "rmsnorm_nd",
+]

@@ -1,0 +1,51 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These present model-layer-friendly signatures (GQA head matching, layout
+transposes) so call sites can swap between the pure-JAX reference path and
+the TPU kernels with one flag.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cubic_step import cubic_solve_fused, cubic_step
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm
+
+
+def attention_bshd(q, k, v, *, causal=True, window=0, **kw):
+    """(B, S, H, Dh) layout (the model zoo's) → flash kernel layout and back.
+    GQA: kv heads repeated up to q heads before the kernel."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+        **kw,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def rmsnorm_nd(x, w, **kw):
+    """RMSNorm over the last axis of an arbitrarily-batched tensor."""
+    shape = x.shape
+    out = rmsnorm(x.reshape(-1, shape[-1]), w, **kw)
+    return out.reshape(shape)
+
+
+__all__ = [
+    "attention_bshd",
+    "cubic_solve_fused",
+    "cubic_step",
+    "flash_attention",
+    "rmsnorm",
+    "rmsnorm_nd",
+]

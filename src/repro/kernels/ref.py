@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract each kernel must
+match; tests sweep shapes/dtypes and assert_allclose against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q,k,v: (B, H, S, Dh) (head-major layout the kernel uses).
+    window=0 ⇒ no sliding window."""
+    B, H, S, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def cubic_step_ref(s, g, H, *, M, gamma, lr):
+    """One Algorithm-2 inner iteration (explicit Hessian, the paper's d≤300
+    regime):  G = g + γHs + (Mγ²/2)‖s‖s;  s ← s − ξG."""
+    s32, g32, H32 = s.astype(jnp.float32), g.astype(jnp.float32), H.astype(jnp.float32)
+    sn = jnp.sqrt(jnp.sum(s32 * s32))
+    G = g32 + gamma * (H32 @ s32) + 0.5 * M * gamma**2 * sn * s32
+    return (s32 - lr * G).astype(s.dtype)
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    """x: (N, d), w: (d,).  Gemma-style (1+w) scaling, fp32 accumulation."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(
+        x.dtype
+    )

@@ -1,0 +1,8 @@
+from .mesh import make_host_mesh, make_production_mesh, num_workers, worker_axes
+
+__all__ = [
+    "make_host_mesh",
+    "make_production_mesh",
+    "num_workers",
+    "worker_axes",
+]

@@ -1,0 +1,34 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required for the smoke tests, which must see one
+CPU device, while the dry-run process sees 512 forced host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over however many devices this host actually has —
+    used by the runnable examples/tests on CPU."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def worker_axes(mesh) -> tuple:
+    """Mesh axes that enumerate the paper's 'worker machines'."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def num_workers(mesh) -> int:
+    import math
+
+    return math.prod(mesh.shape[a] for a in worker_axes(mesh))

@@ -1,0 +1,70 @@
+"""Serving driver: batched prefill + greedy decode with the KV-cache path.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-27b \
+        --preset smoke --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..data.synthetic import TokenStream
+from ..models import build_model
+
+
+def run_serving(arch="gemma3-27b", preset="smoke", batch=4, prompt_len=32,
+                gen=32, seed=0):
+    cfg = get_config(arch)
+    if preset == "smoke":
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+
+    stream = TokenStream(cfg.vocab_size, seed)
+    prompts, _ = stream.batch(0, batch, prompt_len)
+
+    max_len = prompt_len + gen
+    cache = model.init_cache(batch, max_len)
+    step = jax.jit(model.decode_step)
+
+    # prefill token-by-token through the decode path (exactness over speed —
+    # the prefill_32k dry-run shape covers the batched-prefill compute path)
+    t0 = time.time()
+    logits = None
+    for t in range(prompt_len):
+        logits, cache = step(params, cache, prompts[:, t], jnp.int32(t))
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t0 = time.time()
+    for t in range(prompt_len, max_len):
+        out_tokens.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t_dec = time.time() - t0
+    toks = jnp.stack(out_tokens, 1)
+    print(f"[serve] arch={cfg.name} batch={batch} prefill={prompt_len}tok "
+          f"({t_prefill:.2f}s) decode={gen}tok ({t_dec:.2f}s, "
+          f"{batch*gen/max(t_dec,1e-9):.1f} tok/s)")
+    return toks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+    run_serving(args.arch, args.preset, args.batch, args.prompt_len, args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Sharding rules: param / batch / cache PartitionSpecs (DESIGN.md §5).
+
+Parameters: FSDP over the ``data`` (and ``pod``) axes × tensor-parallel over
+``model`` — classified by leaf name ("column" weights shard their output dim
+over ``model``, "row" weights their input dim), with a leading ``None`` for
+the scan-stacked repeat axis.
+
+Decode caches: ``batch → data(+pod)``, ``cache sequence → model`` — the
+flash-decode layout that sidesteps indivisible kv-head counts and spreads a
+500k-token cache across the pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import worker_axes
+
+# leaf-name classification -------------------------------------------------
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj_z", "in_proj_x",
+        "w_gelu", "w_rnn_in", "w_r", "w_i", "prefix_proj"}  # out dim → model
+_ROW = {"wo", "w_down", "out_proj", "w_out", "lm_head"}  # in → model
+_REPL = {"A_log", "dt_bias", "lam", "b_r", "b_i", "norm", "norm1", "norm2",
+         "final_norm", "norm_cross", "norm_mlp", "conv_b", "router",
+         # small SSD side projections: replicated ⇒ the B/C/dt einsums and
+         # the state-space contractions need no collectives (§Perf iter 6)
+         "in_proj_B", "in_proj_C", "in_proj_dt",
+         "conv_B_w", "conv_B_b", "conv_C_w", "conv_C_b"}
+
+
+def _param_rule(path_names, leaf, fsdp):
+    name = path_names[-1]
+    nd = leaf.ndim
+    stacked = "unit" in path_names  # leading repeat axis from stack_layers
+    lead = (None,) if stacked else ()
+
+    def spec(*dims):
+        return P(*(lead + dims))
+
+    # §Perf iteration 2: keep the vocab axis of the embedding/lm_head on
+    # ``model`` and the d axis UNsharded.  Sharding d over the workers (the
+    # FSDP-natural choice) makes every logits einsum a d-contraction of
+    # partial products ⇒ an all-reduce of the full (B,S,V/16) logits per
+    # pass (~1e13 B/dev on gemma3-27b train).  With d replicated the logits
+    # are produced vocab-sharded with no collective; the softmax then only
+    # reduces (B,S) scalars.  Cost: embed+lm_head lose FSDP (~350 MB/dev on
+    # the 262k-vocab configs) — measured 9.6× collective-term win.
+    if name == "embed":
+        return P(None, "model")
+    if name == "lm_head":
+        return P(None, "model")
+    if name in _REPL or nd - len(lead) <= 1:
+        return P(*(lead + (None,) * (nd - len(lead))))
+    if name == "conv_w":
+        return spec(None, "model")
+    if name in _COL:
+        if nd - len(lead) == 3:  # MoE experts (E, d, f): experts → model
+            return spec("model", fsdp, None)
+        return spec(fsdp, "model")
+    if name in _ROW:
+        if nd - len(lead) == 3:  # (E, f, d)
+            return spec("model", None, fsdp)
+        return spec("model", fsdp)
+    # default: replicate (safe, and loud in the roofline if it matters)
+    return P(*(lead + (None,) * (nd - len(lead))))
+
+
+def param_specs(params_shape, mesh):
+    """PartitionSpec pytree matching a params (shape-)pytree."""
+    fsdp = worker_axes(mesh)
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return _param_rule(path, tree, fsdp)
+
+    return walk(params_shape, ())
+
+
+def param_shardings(params_shape, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params_shape, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def tp_only_constraint(mesh):
+    """Constraint fn for one scanned superblock's param slice: TP ('model')
+    sharding kept, FSDP axes stripped — the per-layer ZeRO-3 gather target
+    (installed via repro.models.runtime during lowering)."""
+
+    def strip(spec):
+        return P(*(None if (d == "data" or isinstance(d, tuple)) else d
+                   for d in spec))
+
+    def constrain(tree):
+        def walk(t, path):
+            if isinstance(t, dict):
+                return {k: walk(v, path + (k,)) for k, v in t.items()}
+            # path here never contains "unit" (the slice already lost the
+            # reps axis), so _param_rule emits unstacked specs.
+            spec = strip(_param_rule(path, t, ("data",)))
+            return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+        return walk(tree, ())
+
+    return constrain
+
+
+def channels_last_constraint(mesh):
+    """Activation hook: last axis → 'model', everything else unsharded."""
+
+    def constrain(x):
+        spec = P(*((None,) * (x.ndim - 1) + ("model",)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def worker_tree_specs(params_shape, mesh, grouped: bool = False):
+    """Specs for worker-stacked update trees (leading m axis).
+
+    ``grouped=False`` (m == #data rows): m → data(+pod) worker axes, TP dims
+    keep ``model``, FSDP dims go unsharded — each worker's update lives on
+    its own data-row, TP-sharded.
+
+    ``grouped=True`` (m < #data rows, worker = a group of rows): the m axis
+    is replicated and the update keeps the FULL param sharding (FSDP × TP) —
+    per-chip footprint m·P/chips, which is what lets llama3-405b's
+    cubic-Newton state fit (DESIGN.md §5 / EXPERIMENTS §Perf)."""
+    w = worker_axes(mesh)
+    base = param_specs(params_shape, mesh)
+
+    if grouped:
+        return jax.tree_util.tree_map(
+            lambda s: P(None, *s), base, is_leaf=lambda x: isinstance(x, P)
+        )
+
+    def strip_fsdp(spec):
+        dims = tuple(None if d == w or d == "data" or (isinstance(d, tuple))
+                     else d for d in spec)
+        return P(w, *dims)
+
+    return jax.tree_util.tree_map(
+        strip_fsdp, base, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def worker_tree_shardings(params_shape, mesh, grouped: bool = False):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        worker_tree_specs(params_shape, mesh, grouped),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_specs(batch_shape, mesh, worker_axis=True):
+    """Training batches: leading worker axis → data(+pod) mesh axes."""
+    w = worker_axes(mesh)
+
+    def rule(leaf):
+        dims = (w,) + (None,) * (leaf.ndim - 1)
+        return P(*dims)
+
+    return jax.tree_util.tree_map(rule, batch_shape)
+
+
+def _cache_rule(path_names, leaf, b_ax):
+    name = path_names[-1]
+    stacked = "unit" in path_names
+    lead = (None,) if stacked else ()
+
+    def spec(*dims):
+        return P(*(lead + dims))
+
+    if name in ("k", "v"):       # (B, S_cache, Hkv, Dh): seq → model
+        return spec(b_ax, "model", None, None)
+    if name in ("ck", "cv"):     # (B, S_enc, Hkv, Dh): heads → model
+        return spec(b_ax, None, "model", None)
+    if name == "ssm":            # (B, H, N, P): heads → model
+        return spec(b_ax, "model", None, None)
+    if name == "conv":           # (B, W-1, Ch): channels → model
+        return spec(b_ax, None, "model")
+    if name in ("conv_B", "conv_C"):  # (B, W-1, N): small, replicate chans
+        return spec(b_ax, None, None)
+    if name == "h":              # (B, d): features → model
+        return spec(b_ax, "model")
+    return P(*(lead + (None,) * (leaf.ndim - len(lead))))
+
+
+def cache_specs(cache_shape, mesh, batch_size):
+    """Decode caches.  batch → data(+pod) when it divides evenly, else
+    replicated (the long_500k single-sequence case)."""
+    w = worker_axes(mesh)
+    import math
+
+    n_w = math.prod(mesh.shape[a] for a in w)
+    b_ax = w if batch_size % n_w == 0 and batch_size >= n_w else None
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return _cache_rule(path, tree, b_ax)
+
+    return walk(cache_shape, ())
+
+
+def decode_token_spec(mesh, batch_size):
+    import math
+
+    w = worker_axes(mesh)
+    n_w = math.prod(mesh.shape[a] for a in w)
+    return P(w) if batch_size % n_w == 0 and batch_size >= n_w else P(None)

@@ -1,0 +1,4 @@
+from .api import Model, build_model
+from .decoder import layer_plan
+
+__all__ = ["Model", "build_model", "layer_plan"]

@@ -1,0 +1,43 @@
+"""Public model API: ``build_model(cfg)`` → a ``Model`` facade.
+
+Every architecture family goes through the generic pattern decoder
+(:mod:`repro.models.decoder`); the facade binds the config and exposes the
+five functions the rest of the framework consumes (train step, serving,
+dry-run, smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+
+from . import decoder
+from ..configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable            # (key) -> params
+    forward: Callable         # (params, tokens, **mods) -> (logits, aux)
+    loss_fn: Callable         # (params, batch) -> scalar
+    init_cache: Callable      # (batch, max_len) -> cache
+    decode_step: Callable     # (params, cache, tokens, pos) -> (logits, cache)
+
+    def param_count(self, params) -> int:
+        return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(decoder.init, cfg=cfg),
+        forward=lambda params, tokens, **kw: decoder.forward(params, cfg, tokens, **kw),
+        loss_fn=lambda params, batch: decoder.loss_fn(params, cfg, batch),
+        init_cache=lambda batch, max_len: decoder.init_cache(cfg, batch, max_len),
+        decode_step=lambda params, cache, tokens, pos: decoder.decode_step(
+            params, cfg, cache, tokens, pos
+        ),
+    )

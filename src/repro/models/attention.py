@@ -1,0 +1,233 @@
+"""Attention: chunked (online-softmax) training path + KV-cache decode path.
+
+The training/prefill path is a pure-JAX "flash" attention: an outer
+``lax.scan`` over query chunks with, per query chunk,
+
+* **global causal**: an inner scan over KV chunks carrying running
+  (max, sum-exp, accumulator) statistics — live memory is O(chunk²), never
+  O(S²).  Chunks strictly above the diagonal still issue (masked) FLOPs —
+  the classic static-shape tax, quantified in EXPERIMENTS.md §Roofline.
+* **sliding window**: a ``dynamic_slice`` of exactly ``window + chunk`` keys
+  per query chunk — honestly sub-quadratic FLOPs, which is what lets
+  gemma3/recurrentgemma run the ``long_500k`` shape.
+
+The decode path scores one query token against a (possibly model-axis
+sharded) cache — O(S) per emitted token.
+
+The Pallas TPU kernel in :mod:`repro.kernels.flash_attention` implements the
+same contract for the hot path; :func:`attention` is also its reference
+oracle (see kernels/ref.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, num_heads):
+    """GQA: repeat kv heads to match query heads. k: (B,S,Hkv,Dh)."""
+    hkv = k.shape[2]
+    if hkv == num_heads:
+        return k
+    rep = num_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    """O(S²)-memory oracle. q: (B,Sq,H,Dh), k/v: (B,Sk,Hkv,Dh)."""
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None and window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_chunk", "kv_chunk"))
+def chunked_attention(q, k, v, *, causal=True, window=None, q_chunk=512, kv_chunk=512):
+    """Memory-bounded attention (online softmax).  Same contract as
+    :func:`reference_attention` with q_offset=0 and Sq == Sk."""
+    B, S_orig, H, Dh = q.shape
+    Hkv = k.shape[2]
+    q_chunk = min(q_chunk, S_orig)
+    kv_chunk = min(kv_chunk, S_orig)
+    # pad to a chunk multiple; padded keys are masked out, padded query rows
+    # are sliced off at the end.
+    import math
+
+    pad = (-S_orig) % math.lcm(q_chunk, kv_chunk)
+    if pad:
+        padspec = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, padspec)
+        k = jnp.pad(k, padspec)
+        v = jnp.pad(v, padspec)
+    S = S_orig + pad
+    n_q = S // q_chunk
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    rep = H // Hkv
+
+    qs = q.reshape(B, n_q, q_chunk, H, Dh)
+
+    if window is not None and window > 0:
+        # Banded path: slice exactly window+q_chunk keys per query chunk.
+        span = window + q_chunk
+        span = min(span, S)
+        kpad = jnp.pad(k, ((0, 0), (span, 0), (0, 0), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (span, 0), (0, 0), (0, 0)))
+
+        def q_body(carry, qi):
+            qc = qs[:, qi]  # (B,C,H,Dh)
+            qstart = qi * q_chunk
+            # keys [qstart+q_chunk-span, qstart+q_chunk) in padded coords
+            start = qstart + q_chunk
+            kc = jax.lax.dynamic_slice_in_dim(kpad, start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vpad, start, span, axis=1)
+            kc = _repeat_kv(kc, H)
+            vc = _repeat_kv(vc, H)
+            logits = (
+                jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32), kc.astype(jnp.float32))
+                * scale
+            )
+            qpos = qstart + jnp.arange(q_chunk)
+            kpos = (qstart + q_chunk - span) + jnp.arange(span)
+            mask = (kpos[None, :] <= qpos[:, None]) if causal else jnp.ones((q_chunk, span), bool)
+            mask &= kpos[None, :] > qpos[:, None] - window
+            mask &= kpos[None, :] >= 0
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            probs = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", probs, vc.astype(jnp.float32))
+            return carry, out.astype(q.dtype)
+
+        _, outs = jax.lax.scan(q_body, 0, jnp.arange(n_q))
+        return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)[:, :S_orig]
+
+    n_kv = S // kv_chunk
+    ks = k.reshape(B, n_kv, kv_chunk, Hkv, Dh)
+    vs = v.reshape(B, n_kv, kv_chunk, Hkv, Dh)
+
+    if causal:
+        # Triangle scan (§Perf iteration 4): enumerate only the visible
+        # (q-chunk, kv-chunk) pairs statically — n(n+1)/2 tiles instead of
+        # n², halving both issued FLOPs and chunk-logits HBM traffic vs the
+        # masked dense grid.  Only diagonal tiles need a mask.
+        pairs = [
+            (qi, ki)
+            for qi in range(n_q)
+            for ki in range(n_kv)
+            if ki * kv_chunk <= qi * q_chunk + q_chunk - 1
+        ]
+        pair_arr = jnp.asarray(pairs, jnp.int32)  # (P, 2)
+
+        def pair_body(state, pair):
+            m_run, l_run, acc = state  # (n_q,B,H,C), …, (n_q,B,H,C,Dh)
+            qi, ki = pair[0], pair[1]
+            qc = jax.lax.dynamic_index_in_dim(qs, qi, 1, keepdims=False)
+            qc = qc.astype(jnp.float32)                      # (B,C,H,Dh)
+            kc = _repeat_kv(
+                jax.lax.dynamic_index_in_dim(ks, ki, 1, keepdims=False), H
+            ).astype(jnp.float32)
+            vc = _repeat_kv(
+                jax.lax.dynamic_index_in_dim(vs, ki, 1, keepdims=False), H
+            ).astype(jnp.float32)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qc, kc) * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            if pad:
+                mask &= (kpos < S_orig)[None, :]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+
+            m_prev = jax.lax.dynamic_index_in_dim(m_run, qi, 0, keepdims=False)
+            l_prev = jax.lax.dynamic_index_in_dim(l_run, qi, 0, keepdims=False)
+            a_prev = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+            m_new = jnp.maximum(m_prev, logits.max(-1))
+            corr = jnp.exp(m_prev - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_prev * corr + p.sum(-1)
+            a_new = a_prev * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+            m_run = jax.lax.dynamic_update_index_in_dim(m_run, m_new, qi, 0)
+            l_run = jax.lax.dynamic_update_index_in_dim(l_run, l_new, qi, 0)
+            acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+            return (m_run, l_run, acc), None
+
+        m0 = jnp.full((n_q, B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((n_q, B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((n_q, B, H, q_chunk, Dh), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(pair_body, (m0, l0, a0), pair_arr)
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]      # (n_q,B,H,C,Dh)
+        out = out.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dh)
+        return out.astype(q.dtype)[:, :S_orig]
+
+    # Non-causal path: inner scan over all KV chunks with running
+    # max / sum-exp — flash-attention in pure JAX.
+    def q_body(carry, qi):
+        qc = qs[:, qi].astype(jnp.float32)  # (B,C,H,Dh)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(state, ki):
+            m_run, l_run, acc = state
+            kc = _repeat_kv(ks[:, ki], H).astype(jnp.float32)
+            vc = _repeat_kv(vs[:, ki], H).astype(jnp.float32)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qc, kc) * scale
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if pad:
+                mask &= (kpos < S_orig)[None, :]
+            if causal or pad:
+                logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, logits.max(-1))
+            correction = jnp.exp(m_run - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_run * correction + p.sum(-1)
+            acc = acc * correction[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, Dh), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(n_kv))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return carry, out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,C,H,Dh)
+
+    _, outs = jax.lax.scan(q_body, 0, jnp.arange(n_q))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)[:, :S_orig]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None):
+    """One-token decode against a cache.
+
+    q: (B, H, Dh); caches: (B, S_max, Hkv, Dh); cache_len: scalar int —
+    number of valid positions (the new token's KV must already be written at
+    ``cache_len - 1``).  Returns (B, H, Dh).
+    """
+    B, S_max, Hkv, Dh = k_cache.shape
+    H = q.shape[1]
+    k = _repeat_kv(k_cache, H)
+    v = _repeat_kv(v_cache, H)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S_max)
+    mask = kpos < cache_len
+    if window is not None and window > 0:
+        mask &= kpos >= cache_len - window
+    logits = jnp.where(mask[None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,325 @@
+"""Block registry: every architecture family is a string of block types.
+
+    'G' global causal attention + SwiGLU MLP          (llama/qwen/internlm…)
+    'L' sliding-window causal attention + SwiGLU MLP  (gemma3 local, griffin)
+    'M' global attention + MoE FFN                    (deepseek-moe, phi3.5)
+    'S' Mamba-2 SSD mixer (no MLP)                    (mamba2)
+    'R' RG-LRU recurrent mixer + SwiGLU MLP           (recurrentgemma)
+    'C' causal self-attn + cross-attn + MLP           (whisper decoder)
+    'E' bidirectional attention + MLP                 (whisper encoder)
+
+Each block type provides ``init(key,cfg,dtype)``, ``apply(p,x,ctx)`` →
+``(x, aux)``, ``cache_init(cfg,batch,max_len,dtype)`` and
+``decode(p, x_t, cache, ctx)`` → ``(x_t, cache)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention, decode_attention
+from .layers import (
+    apply_rope,
+    init_attention,
+    init_mlp,
+    rms_norm,
+    swiglu,
+)
+from . import mamba2 as m2
+from . import moe as moe_lib
+from . import rglru as rg
+
+ZERO_AUX = lambda: jnp.float32(0.0)
+
+
+# --------------------------------------------------------------------------
+# attention blocks ('G', 'L', 'E', and the attention part of 'M'/'C')
+# --------------------------------------------------------------------------
+
+
+def _init_attn_mlp(key, cfg, dtype, with_mlp=True):
+    ka, km = jax.random.split(key)
+    p = {
+        "attn": init_attention(
+            ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+        ),
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if with_mlp:
+        p["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _self_attention(p_attn, h, cfg, positions, *, causal, window):
+    B, S, _ = h.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", h, p_attn["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", h, p_attn["wk"]).reshape(B, S, Hkv, Dh)
+    v = jnp.einsum("bsd,de->bse", h, p_attn["wv"]).reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(
+        q, k, v, causal=causal, window=window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+    )
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * Dh), p_attn["wo"])
+
+
+def _attn_apply(p, x, ctx, *, window, causal=True, with_mlp=True):
+    cfg = ctx["cfg"]
+    h = rms_norm(x, p["norm1"])
+    x = x + _self_attention(p["attn"], h, cfg, ctx["positions"], causal=causal, window=window)
+    if with_mlp:
+        h2 = rms_norm(x, p["norm2"])
+        mp = p["mlp"]
+        x = x + swiglu(h2, mp["w_gate"], mp["w_up"], mp["w_down"])
+    return x, ZERO_AUX()
+
+
+def _attn_cache_init(cfg, batch, max_len, dtype, *, window=0):
+    S = min(window, max_len) if window else max_len
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, S, Hkv, Dh), dtype),
+        "v": jnp.zeros((batch, S, Hkv, Dh), dtype),
+    }
+
+
+def _attn_decode(p, x, cache, ctx, *, window=0, with_mlp=True):
+    cfg = ctx["cfg"]
+    pos = ctx["pos"]  # scalar: index of the new token
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    h = rms_norm(x, p["norm1"])
+    q = (h @ p["attn"]["wq"]).reshape(B, 1, H, Dh)
+    k = (h @ p["attn"]["wk"]).reshape(B, 1, Hkv, Dh)
+    v = (h @ p["attn"]["wv"]).reshape(B, Hkv, Dh)
+    posv = jnp.full((B, 1), pos)
+    q = apply_rope(q, posv, cfg.rope_theta)[:, 0]
+    k = apply_rope(k, posv, cfg.rope_theta)[:, 0]
+    S_cache = cache["k"].shape[1]
+    if window:
+        # rolling window cache: slot cycles; every resident entry is in-window
+        slot = pos % S_cache
+        cache_len = jnp.minimum(pos + 1, S_cache)
+    else:
+        slot = pos
+        cache_len = pos + 1
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, None], slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, None], slot, axis=1)
+    o = decode_attention(q, kc, vc, cache_len)
+    x = x + (o.reshape(B, H * Dh) @ p["attn"]["wo"])
+    if with_mlp:
+        h2 = rms_norm(x, p["norm2"])
+        mp = p["mlp"]
+        x = x + swiglu(h2, mp["w_gate"], mp["w_up"], mp["w_down"])
+    return x, {"k": kc, "v": vc}
+
+
+# --------------------------------------------------------------------------
+# MoE block
+# --------------------------------------------------------------------------
+
+
+def _moe_init(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    p = _init_attn_mlp(ka, cfg, dtype, with_mlp=False)
+    p["moe"] = moe_lib.init_moe(km, cfg, dtype)
+    return p
+
+
+def _moe_apply(p, x, ctx):
+    cfg = ctx["cfg"]
+    x, _ = _attn_apply(p, x, ctx, window=None, with_mlp=False)
+    h2 = rms_norm(x, p["norm2"])
+    y, aux = moe_lib.apply_moe(p["moe"], h2, cfg)
+    return x + y, aux["lb_loss"] + aux["z_loss"]
+
+
+def _moe_decode(p, x, cache, ctx):
+    cfg = ctx["cfg"]
+    x, cache = _attn_decode(p, x, cache, ctx, with_mlp=False)
+    h2 = rms_norm(x, p["norm2"])
+    y, _ = moe_lib.apply_moe(p["moe"], h2[:, None, :], cfg)
+    return x + y[:, 0], cache
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 block
+# --------------------------------------------------------------------------
+
+
+def _ssm_init(key, cfg, dtype):
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "mixer": m2.init_mamba2(key, cfg, dtype),
+    }
+
+
+def _ssm_apply(p, x, ctx):
+    cfg = ctx["cfg"]
+    h = rms_norm(x, p["norm1"])
+    return x + m2.apply_mamba2(p["mixer"], h, cfg), ZERO_AUX()
+
+
+def _ssm_cache_init(cfg, batch, max_len, dtype):
+    del max_len
+    return m2.init_mamba2_cache(cfg, batch, dtype)
+
+
+def _ssm_decode(p, x, cache, ctx):
+    cfg = ctx["cfg"]
+    h = rms_norm(x, p["norm1"])
+    y, cache = m2.decode_mamba2(p["mixer"], h, cache, cfg)
+    return x + y, cache
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block ('R')
+# --------------------------------------------------------------------------
+
+
+def _rg_init(key, cfg, dtype):
+    kr, km = jax.random.split(key)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+        "mixer": rg.init_rglru_block(kr, cfg, dtype),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _rg_apply(p, x, ctx):
+    cfg = ctx["cfg"]
+    h = rms_norm(x, p["norm1"])
+    x = x + rg.apply_rglru_block(p["mixer"], h, cfg)
+    h2 = rms_norm(x, p["norm2"])
+    mp = p["mlp"]
+    return x + swiglu(h2, mp["w_gate"], mp["w_up"], mp["w_down"]), ZERO_AUX()
+
+
+def _rg_cache_init(cfg, batch, max_len, dtype):
+    del max_len
+    return rg.init_rglru_cache(cfg, batch, dtype)
+
+
+def _rg_decode(p, x, cache, ctx):
+    cfg = ctx["cfg"]
+    h = rms_norm(x, p["norm1"])
+    y, cache = rg.decode_rglru_block(p["mixer"], h, cache, cfg)
+    x = x + y
+    h2 = rms_norm(x, p["norm2"])
+    mp = p["mlp"]
+    return x + swiglu(h2, mp["w_gate"], mp["w_up"], mp["w_down"]), cache
+
+
+# --------------------------------------------------------------------------
+# whisper decoder block ('C'): self + cross + MLP
+# --------------------------------------------------------------------------
+
+
+def _cross_init(key, cfg, dtype):
+    ks, kc, km = jax.random.split(key, 3)
+    return {
+        "self": _init_attn_mlp(ks, cfg, dtype, with_mlp=False),
+        "cross_attn": init_attention(
+            kc, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+        ),
+        "norm_cross": jnp.zeros((cfg.d_model,), dtype),
+        "norm_mlp": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _cross_attention(pa, h, enc_out, cfg):
+    B, S, _ = h.shape
+    Se = enc_out.shape[1]
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", h, pa["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", enc_out, pa["wk"]).reshape(B, Se, Hkv, Dh)
+    v = jnp.einsum("bsd,de->bse", enc_out, pa["wv"]).reshape(B, Se, Hkv, Dh)
+    from .attention import reference_attention
+
+    o = reference_attention(q, k, v, causal=False)
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * Dh), pa["wo"])
+
+
+def _cross_apply(p, x, ctx):
+    cfg = ctx["cfg"]
+    x, _ = _attn_apply(p["self"], x, ctx, window=None, with_mlp=False)
+    h = rms_norm(x, p["norm_cross"])
+    x = x + _cross_attention(p["cross_attn"], h, ctx["enc_out"], cfg)
+    h2 = rms_norm(x, p["norm_mlp"])
+    mp = p["mlp"]
+    return x + swiglu(h2, mp["w_gate"], mp["w_up"], mp["w_down"]), ZERO_AUX()
+
+
+def _cross_cache_init(cfg, batch, max_len, dtype):
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "self": _attn_cache_init(cfg, batch, max_len, dtype),
+        # cross K/V computed once from encoder output at prefill
+        "ck": jnp.zeros((batch, cfg.encoder_len, Hkv, Dh), dtype),
+        "cv": jnp.zeros((batch, cfg.encoder_len, Hkv, Dh), dtype),
+    }
+
+
+def _cross_decode(p, x, cache, ctx):
+    cfg = ctx["cfg"]
+    B = x.shape[0]
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+    x, self_cache = _attn_decode(p["self"], x, cache["self"], ctx, with_mlp=False)
+    h = rms_norm(x, p["norm_cross"])
+    q = (h @ p["cross_attn"]["wq"]).reshape(B, H, Dh)
+    o = decode_attention(q, cache["ck"], cache["cv"], cache["ck"].shape[1])
+    x = x + (o.reshape(B, H * Dh) @ p["cross_attn"]["wo"])
+    h2 = rms_norm(x, p["norm_mlp"])
+    mp = p["mlp"]
+    x = x + swiglu(h2, mp["w_gate"], mp["w_up"], mp["w_down"])
+    return x, {"self": self_cache, "ck": cache["ck"], "cv": cache["cv"]}
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+
+class BlockType:
+    def __init__(self, init, apply, cache_init, decode):
+        self.init = init
+        self.apply = apply
+        self.cache_init = cache_init
+        self.decode = decode
+
+
+def _window_of(cfg):
+    return cfg.window if cfg.window > 0 else None
+
+
+BLOCKS = {
+    "G": BlockType(
+        init=lambda key, cfg, dt: _init_attn_mlp(key, cfg, dt),
+        apply=lambda p, x, ctx: _attn_apply(p, x, ctx, window=None),
+        cache_init=lambda cfg, b, s, dt: _attn_cache_init(cfg, b, s, dt),
+        decode=lambda p, x, c, ctx: _attn_decode(p, x, c, ctx),
+    ),
+    "L": BlockType(
+        init=lambda key, cfg, dt: _init_attn_mlp(key, cfg, dt),
+        apply=lambda p, x, ctx: _attn_apply(p, x, ctx, window=_window_of(ctx["cfg"])),
+        cache_init=lambda cfg, b, s, dt: _attn_cache_init(cfg, b, s, dt, window=cfg.window),
+        decode=lambda p, x, c, ctx: _attn_decode(p, x, c, ctx, window=ctx["cfg"].window),
+    ),
+    "E": BlockType(
+        init=lambda key, cfg, dt: _init_attn_mlp(key, cfg, dt),
+        apply=lambda p, x, ctx: _attn_apply(p, x, ctx, window=None, causal=False),
+        cache_init=None,
+        decode=None,
+    ),
+    "M": BlockType(_moe_init, _moe_apply,
+                   lambda cfg, b, s, dt: _attn_cache_init(cfg, b, s, dt),
+                   _moe_decode),
+    "S": BlockType(_ssm_init, _ssm_apply, _ssm_cache_init, _ssm_decode),
+    "R": BlockType(_rg_init, _rg_apply, _rg_cache_init, _rg_decode),
+    "C": BlockType(_cross_init, _cross_apply, _cross_cache_init, _cross_decode),
+}

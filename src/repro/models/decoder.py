@@ -1,0 +1,215 @@
+"""Generic layer-pattern decoder: one model implementation for all families.
+
+A config resolves to a *layer plan* ``(unit, reps, tail)`` — e.g. gemma3-27b
+is ``("LLLLLG", 10, "LL")`` — and the stack runs as a ``lax.scan`` over the
+``reps`` repeats of the unit (block params stacked on a leading repeat axis)
+followed by the unrolled tail.  One scan body = one superblock; with
+``cfg.remat`` the body is wrapped in ``jax.checkpoint`` so activation memory
+is O(one superblock), compile time O(1) in depth.
+
+The same plan drives the decode path: per-block caches are stacked on the
+repeat axis and scanned through.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import runtime
+from .blocks import BLOCKS
+from .layers import cross_entropy_loss, dense_init, rms_norm, stack_layers
+
+
+def layer_plan(cfg) -> Tuple[str, int, str]:
+    if cfg.hybrid_pattern:
+        unit = cfg.hybrid_pattern
+    elif cfg.family == "moe":
+        unit = "M"
+    elif cfg.family == "ssm":
+        unit = "S"
+    elif cfg.family == "audio":
+        unit = "C"
+    elif cfg.local_global_pattern[0] > 0:
+        nl, ng = cfg.local_global_pattern
+        unit = "L" * nl + "G" * ng
+    elif cfg.window > 0:
+        unit = "L"
+    else:
+        unit = "G"
+    reps = cfg.num_layers // len(unit)
+    tail = unit[: cfg.num_layers % len(unit)]
+    return unit, reps, tail
+
+
+def param_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def init(key, cfg):
+    dt = param_dtype(cfg)
+    unit, reps, tail = layer_plan(cfg)
+    ke, ku, kt, kh, kenc, kpp = jax.random.split(key, 6)
+
+    params = {
+        "embed": dense_init(ke, (cfg.padded_vocab, cfg.d_model), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.padded_vocab), dt),
+        "unit": {},
+        "tail": {},
+    }
+    ukeys = jax.random.split(ku, len(unit))
+    for j, t in enumerate(unit):
+        params["unit"][f"b{j}"] = stack_layers(
+            lambda k, t=t: BLOCKS[t].init(k, cfg, dt), ukeys[j], reps
+        )
+    tkeys = jax.random.split(kt, max(len(tail), 1))
+    for j, t in enumerate(tail):
+        params["tail"][f"b{j}"] = BLOCKS[t].init(tkeys[j], cfg, dt)
+
+    if cfg.family == "audio":
+        # whisper encoder: stub conv frontend ⇒ frame embeddings arrive at
+        # d_model; encoder = stack of 'E' blocks.
+        kl, kn = jax.random.split(kenc)
+        params["encoder"] = {
+            "unit": stack_layers(
+                lambda k: BLOCKS["E"].init(k, cfg, dt), kl, cfg.encoder_layers
+            ),
+            "norm": jnp.zeros((cfg.d_model,), dt),
+        }
+    if cfg.family == "vlm":
+        # projector between (stub) vision embeddings and the LM.
+        params["prefix_proj"] = dense_init(kpp, (cfg.d_model, cfg.d_model), dt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# encoder (whisper)
+# --------------------------------------------------------------------------
+
+
+def encode(params, cfg, enc_emb):
+    """enc_emb: (B, Se, d) stub frame embeddings → encoder output."""
+    x = enc_emb.astype(param_dtype(cfg))
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1])[None], (x.shape[0], x.shape[1])
+    )
+    ctx = {"cfg": cfg, "positions": positions}
+    apply_e = BLOCKS["E"].apply
+
+    def body(x, p):
+        p = runtime.constrain_layer_params(p)
+        x, _ = apply_e(p, x, ctx)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["unit"])
+    return rms_norm(x, params["encoder"]["norm"])
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def forward(params, cfg, tokens, *, prefix_emb=None, enc_emb=None):
+    """Returns (logits, aux_loss).  tokens: (B, S_text)."""
+    dt = param_dtype(cfg)
+    x = params["embed"][tokens]  # (B,S,d) gather
+    if prefix_emb is not None:
+        pe = jnp.einsum("bpd,de->bpe", prefix_emb.astype(dt), params["prefix_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    ctx = {"cfg": cfg, "positions": positions}
+    if enc_emb is not None:
+        ctx["enc_out"] = encode(params, cfg, enc_emb)
+
+    unit, reps, tail = layer_plan(cfg)
+
+    def body(carry, ps):
+        x, aux = carry
+        ps = runtime.constrain_layer_params(ps)  # ZeRO-3 per-layer gather
+        for j, t in enumerate(unit):
+            x, a = BLOCKS[t].apply(ps[f"b{j}"], x, ctx)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["unit"])
+    for j, t in enumerate(tail):
+        x, a = BLOCKS[t].apply(params["tail"][f"b{j}"], x, ctx)
+        aux = aux + a
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, aux
+
+
+def loss_fn(params, cfg, batch):
+    """batch: tokens (B,S), targets (B,S) [, loss_mask, prefix_emb, enc_emb]."""
+    logits, aux = forward(
+        params,
+        cfg,
+        batch["tokens"],
+        prefix_emb=batch.get("prefix_emb"),
+        enc_emb=batch.get("enc_emb"),
+    )
+    targets = batch["targets"]
+    if "prefix_emb" in batch and batch["prefix_emb"] is not None:
+        logits = logits[:, batch["prefix_emb"].shape[1] :]  # text positions only
+    ce = cross_entropy_loss(logits, targets, batch.get("loss_mask"))
+    return ce + aux
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_len, rng=None):
+    """Cache pytree for one-token decode against a ``max_len`` context."""
+    dt = param_dtype(cfg)
+    unit, reps, tail = layer_plan(cfg)
+    cache = {"unit": {}, "tail": {}}
+    for j, t in enumerate(unit):
+        one = BLOCKS[t].cache_init(cfg, batch, max_len, dt)
+        cache["unit"][f"b{j}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), one
+        )
+    for j, t in enumerate(tail):
+        cache["tail"][f"b{j}"] = BLOCKS[t].cache_init(cfg, batch, max_len, dt)
+    return cache
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, enc_out=None):
+    """One new token.  tokens: (B,) int32; pos: scalar int32 (its position,
+    == current cache fill).  Returns (logits (B,V), new cache)."""
+    x = params["embed"][tokens]  # (B,d)
+    ctx = {"cfg": cfg, "pos": pos}
+    unit, reps, tail = layer_plan(cfg)
+
+    def body(x, scanned):
+        ps, cs = scanned
+        new_cs = {}
+        for j, t in enumerate(unit):
+            x, new_cs[f"b{j}"] = BLOCKS[t].decode(ps[f"b{j}"], x, cs[f"b{j}"], ctx)
+        return x, new_cs
+
+    x, new_unit_cache = jax.lax.scan(body, x, (params["unit"], cache["unit"]))
+    new_cache = {"unit": new_unit_cache, "tail": {}}
+    for j, t in enumerate(tail):
+        x, new_cache["tail"][f"b{j}"] = BLOCKS[t].decode(
+            params["tail"][f"b{j}"], x, cache["tail"][f"b{j}"], ctx
+        )
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    return logits, new_cache

@@ -1,0 +1,99 @@
+"""Shared neural-net layers (pure functions over param dicts).
+
+All parameters are plain nested dicts of jnp arrays; block parameters are
+stacked on a leading layer axis and consumed by ``lax.scan`` (constant
+compile time at 126 layers, see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INIT_SCALE = 0.02
+
+
+def dense_init(key, shape, dtype, scale=INIT_SCALE):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rms_norm(x, weight, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim, theta=1e4):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    return inv  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta=1e4):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, Dh/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x·gate) ⊙ (x·up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d_model, num_heads * head_dim), dtype),
+        "wk": dense_init(kk, (d_model, num_kv_heads * head_dim), dtype),
+        "wv": dense_init(kv, (d_model, num_kv_heads * head_dim), dtype),
+        "wo": dense_init(ko, (num_heads * head_dim, d_model), dtype),
+    }
+
+
+def init_block(key, cfg, dtype):
+    """One dense transformer block (attention + MLP + two norms)."""
+    ka, km, kn1, kn2 = jax.random.split(key, 4)
+    del kn1, kn2
+    return {
+        "attn": init_attention(
+            ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, dtype
+        ),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def stack_layers(init_fn, key, n_layers):
+    """vmap an init over layer keys → params stacked on a leading L axis."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+def cross_entropy_loss(logits, targets, mask=None):
+    """Mean next-token NLL in fp32.  logits (..., S, V), targets (..., S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,255 @@
+"""Mamba-2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q; within
+a chunk the recurrence
+
+    h_t = a_t · h_{t-1} + Δ_t · B_t xᵀ_t          (per head, state (N,P))
+    y_t = C_t · h_t
+
+is computed in its *dual* quadratic ("attention-like") form, while states
+propagate *across* chunks through a short sequential ``lax.scan``.  This is
+the TPU-native blocking of the paper's insight: intra-chunk work is dense
+MXU matmuls, inter-chunk work is an O(S/Q) scan of (H,N,P) states.
+
+``ssd_reference`` is the step-by-step recurrence used as the test oracle,
+and also the single-token decode update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+
+def d_inner(cfg):
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg):
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def init_mamba2(key, cfg, dtype):
+    d = cfg.d_model
+    din = d_inner(cfg)
+    N = cfg.ssm_state
+    H = n_ssm_heads(cfg)
+    kz, kx, kb, kc, kdt, kout, kcx, kcb, kcc = jax.random.split(key, 9)
+    # z / x / B / C / dt are SEPARATE projections (not one fused in_proj):
+    # slicing a fused output at non-shard-aligned channel offsets costs a
+    # collective-permute halo per split per layer per pass (§Perf iteration
+    # 6 — 31k permutes on train_4k).  The depthwise conv likewise splits
+    # into per-component convs — mathematically identical to Mamba-2's
+    # fused conv over [x|B|C].  B/C/dt weights are small and kept replicated
+    # so the SSD einsums need no contraction collectives.
+    return {
+        "in_proj_z": dense_init(kz, (d, din), dtype),
+        "in_proj_x": dense_init(kx, (d, din), dtype),
+        "in_proj_B": dense_init(kb, (d, N), dtype),
+        "in_proj_C": dense_init(kc, (d, N), dtype),
+        "in_proj_dt": dense_init(kdt, (d, H), dtype),
+        "conv_w": dense_init(kcx, (cfg.conv_width, din), dtype, scale=0.1),
+        "conv_b": jnp.zeros((din,), dtype),
+        "conv_B_w": dense_init(kcb, (cfg.conv_width, N), jnp.float32, scale=0.1),
+        "conv_B_b": jnp.zeros((N,), jnp.float32),
+        "conv_C_w": dense_init(kcc, (cfg.conv_width, N), jnp.float32, scale=0.1),
+        "conv_C_b": jnp.zeros((N,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) ⇒ stable
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "norm": jnp.zeros((din,), dtype),
+        "out_proj": dense_init(kout, (din, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv as W shifted multiply-adds.  x: (B,S,Ch),
+    w: (W,Ch).  Written without conv_general_dilated: XLA's grouped-conv
+    *gradient* under vmap∘jvp degrades to a dense cross-channel convolution
+    (Ch² kernel!), which blows up both FLOPs and memory — see DESIGN.md §8."""
+    W = w.shape[0]
+    x32 = x.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    out = x32 * w32[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(x32, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w32[W - 1 - i]
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+
+
+def ssd_chunked(x, B, C, log_a, dt, chunk):
+    """Chunked SSD scan.
+
+    x: (b,S,H,P)   input values (per head)
+    B: (b,S,N)     input gates (1 state group, shared across heads)
+    C: (b,S,N)     output gates
+    log_a: (b,S,H) per-step log decay (= Δ_t · A, A<0)
+    dt: (b,S,H)    discretization step
+    Returns y: (b,S,H,P).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    f32 = jnp.float32
+
+    # chunk-major layout for the scan: (nc, b, Q, …).  All per-chunk work
+    # (including the Q×Q dual form) happens INSIDE the scan body so live
+    # memory is one chunk, not the whole sequence (a (b,nc,H,Q,Q) decay
+    # tensor at 4k×48H is ~100 GB — see DESIGN.md §8).
+    # (A bf16 dual-form variant was tried and REFUTED by the dry-run byte
+    # count: the added convert ops outweigh the halved DG buffer at the
+    # CPU-HLO fusion granularity the analyzer sees — §Perf iter 7.)
+    xc = x.reshape(b, nc, Q, H, P).swapaxes(0, 1).astype(f32)
+    Bc = B.reshape(b, nc, Q, N).swapaxes(0, 1).astype(f32)
+    Cc = C.reshape(b, nc, Q, N).swapaxes(0, 1).astype(f32)
+    la = log_a.reshape(b, nc, Q, H).swapaxes(0, 1).astype(f32)
+    dtc = dt.reshape(b, nc, Q, H).swapaxes(0, 1).astype(f32)
+
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]  # j<=i
+
+    def scan_body(h_prev, inp):
+        xcc, bcc, ccc, lac, dtc_c = inp     # (b,Q,H,P), (b,Q,N), …, (b,Q,H)
+        La = jnp.cumsum(lac, axis=1)        # inclusive decay-from-chunk-start
+        La_tot = La[:, -1, :]               # (b,H)
+
+        # intra-chunk dual quadratic form
+        G = jnp.einsum("bin,bjn->bij", ccc, bcc)              # (b,Q,Q)
+        D = jnp.exp(jnp.clip(
+            La.transpose(0, 2, 1)[:, :, :, None]              # (b,H,Q,1)
+            - La.transpose(0, 2, 1)[:, :, None, :], -60, 0))
+        D = jnp.where(causal[None, None], D, 0.0)
+        DG = D * G[:, None]                                   # (b,H,Q,Q)
+        xdt = xcc * dtc_c[..., None]
+        y_intra = jnp.einsum("bhij,bjhp->bihp", DG, xdt)
+
+        # contribution of the carried state
+        y_inter = jnp.einsum(
+            "bin,bhnp,bih->bihp", ccc, h_prev, jnp.exp(jnp.clip(La, -60, 0))
+        )
+
+        # chunk summary + state propagation
+        w = jnp.exp(jnp.clip(La_tot[:, None, :] - La, -60, 0)) * dtc_c  # (b,Q,H)
+        S_c = jnp.einsum("bjh,bjn,bjhp->bhnp", w, bcc, xcc)
+        h_next = (
+            jnp.exp(jnp.clip(La_tot, -60, 0))[..., None, None] * h_prev + S_c
+        )
+        return h_next, y_intra + y_inter
+
+    h0 = jnp.zeros((b, H, N, P), f32)
+    _, ys = jax.lax.scan(scan_body, h0, (xc, Bc, Cc, la, dtc))
+    y = ys.swapaxes(0, 1).reshape(b, S, H, P)
+    return y.astype(x.dtype)
+
+
+def ssd_reference(x, B, C, log_a, dt):
+    """Step-by-step oracle (same signature as ssd_chunked, no chunk arg)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, Bt, Ct, lat, dtt = inp
+        h = jnp.exp(lat)[..., None, None] * h + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, Bt, xt
+        )
+        y = jnp.einsum("bn,bhnp->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((b, H, N, P), f32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(f32),
+        B.transpose(1, 0, 2).astype(f32),
+        C.transpose(1, 0, 2).astype(f32),
+        log_a.transpose(1, 0, 2).astype(f32),
+        dt.transpose(1, 0, 2).astype(f32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def _mix_inputs(p, x, cfg):
+    from . import runtime
+
+    z = jnp.einsum("bsd,de->bse", x, p["in_proj_z"])
+    xs = jnp.einsum("bsd,de->bse", x, p["in_proj_x"])
+    Bg = jnp.einsum("bsd,dn->bsn", x, p["in_proj_B"])
+    Cg = jnp.einsum("bsd,dn->bsn", x, p["in_proj_C"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_proj_dt"])
+    xs = runtime.constrain_channels_last(xs)  # keep seq unsharded (§Perf)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]))
+    Bg = jax.nn.silu(_causal_conv(Bg, p["conv_B_w"], p["conv_B_b"]))
+    Cg = jax.nn.silu(_causal_conv(Cg, p["conv_C_w"], p["conv_C_b"]))
+    H = n_ssm_heads(cfg)
+    P = cfg.ssm_head_dim
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    log_a = dt * A  # (b,s,H)
+    xh = xs.reshape(x.shape[0], x.shape[1], H, P)
+    return z, xh, Bg, Cg, log_a, dt
+
+
+def apply_mamba2(p, x, cfg):
+    """Full mixer: in_proj → conv → SSD → gated norm → out_proj."""
+    z, xh, Bg, Cg, log_a, dt = _mix_inputs(p, x, cfg)
+    y = ssd_chunked(xh, Bg, Cg, log_a, dt, cfg.ssm_chunk)
+    y = y.reshape(x.shape[0], x.shape[1], -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+# ------------------------- decode path -------------------------------------
+
+
+def init_mamba2_cache(cfg, batch, dtype):
+    din = d_inner(cfg)
+    N = cfg.ssm_state
+    H = n_ssm_heads(cfg)
+    P = cfg.ssm_head_dim
+    W = cfg.conv_width - 1
+    return {
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, W, din), dtype),
+        "conv_B": jnp.zeros((batch, W, N), jnp.float32),
+        "conv_C": jnp.zeros((batch, W, N), jnp.float32),
+    }
+
+
+def _conv_step(win_cache, x_t, w, b):
+    """One causal-conv step.  win_cache: (B,W-1,C); x_t: (B,C)."""
+    win = jnp.concatenate([win_cache, x_t[:, None, :]], axis=1)
+    out = (
+        jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), w.astype(jnp.float32))
+        + b.astype(jnp.float32)
+    )
+    return out.astype(x_t.dtype), win[:, 1:, :]
+
+
+def decode_mamba2(p, x, cache, cfg):
+    """x: (B, d) one token.  Returns (y (B,d), new cache)."""
+    B = x.shape[0]
+    z = x @ p["in_proj_z"]
+    xs_t = x @ p["in_proj_x"]
+    Bg_t = x @ p["in_proj_B"]
+    Cg_t = x @ p["in_proj_C"]
+    dt_raw = x @ p["in_proj_dt"]
+    xs_t, conv_x = _conv_step(cache["conv"], xs_t, p["conv_w"], p["conv_b"])
+    Bg_t, conv_B = _conv_step(cache["conv_B"], Bg_t, p["conv_B_w"], p["conv_B_b"])
+    Cg_t, conv_C = _conv_step(cache["conv_C"], Cg_t, p["conv_C_w"], p["conv_C_b"])
+    xs_t, Bg_t, Cg_t = map(jax.nn.silu, (xs_t, Bg_t, Cg_t))
+    H, P = n_ssm_heads(cfg), cfg.ssm_head_dim
+    xs = xs_t.reshape(B, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))
+    h = a[..., None, None] * cache["ssm"] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bg_t.astype(jnp.float32), xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cg_t.astype(jnp.float32), h).reshape(B, -1)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    new_cache = {"ssm": h, "conv": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+    return out, new_cache

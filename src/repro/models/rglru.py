@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(W_r ξ_t + b_r)                     (recurrence gate)
+    i_t = σ(W_i ξ_t + b_i)                     (input gate)
+    a_t = exp(−c · softplus(Λ) ⊙ r_t)          (c = 8)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ ξ_t)
+
+Training parallelizes the linear recurrence with ``lax.associative_scan``
+over time (TPU-friendly log-depth scan); decode is the single-step update.
+The full block is Griffin's gated structure: GeLU branch ⊙ (conv → RG-LRU)
+branch → output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg, dtype):
+    d = cfg.d_model
+    kx, ky, kr, ki, kl, ko, kc = jax.random.split(key, 7)
+    return {
+        "w_gelu": dense_init(kx, (d, d), dtype),
+        "w_rnn_in": dense_init(ky, (d, d), dtype),
+        "conv_w": dense_init(kc, (cfg.conv_width, d), dtype, scale=0.1),
+        "conv_b": jnp.zeros((d,), dtype),
+        "w_r": dense_init(kr, (d, d), dtype),
+        "b_r": jnp.zeros((d,), jnp.float32),
+        "w_i": dense_init(ki, (d, d), dtype),
+        "b_i": jnp.zeros((d,), jnp.float32),
+        # Λ init so that a ≈ U[0.9, 0.999] at r=1 (paper's init range)
+        "lam": jnp.linspace(2.0, 5.0, d).astype(jnp.float32),
+        "w_out": dense_init(ko, (d, d), dtype),
+    }
+
+
+def _gates(p, xi):
+    r = jax.nn.sigmoid(xi.astype(jnp.float32) @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(xi.astype(jnp.float32) @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (B,[S,]d), < 0
+    return i, log_a
+
+
+def rglru_scan(p, xi):
+    """xi: (B,S,d) → h: (B,S,d) via associative scan."""
+    i, log_a = _gates(p, xi)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * i * xi.astype(jnp.float32)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_s
+    return h.astype(xi.dtype)
+
+
+def rglru_step(p, xi_t, h_prev):
+    """Single decode step.  xi_t: (B,d); h_prev: (B,d) fp32."""
+    i, log_a = _gates(p, xi_t)
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * i * xi_t.astype(
+        jnp.float32
+    )
+    return h
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv as shifted multiply-adds (see mamba2._causal_conv
+    for why conv_general_dilated is avoided)."""
+    W = w.shape[0]
+    x32 = x.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    out = x32 * w32[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(x32, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w32[W - 1 - i]
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_rglru_block(p, x, cfg):
+    """Griffin recurrent mixer.  x: (B,S,d) → (B,S,d)."""
+    from . import runtime
+
+    gelu_branch = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gelu"]))
+    xi = jnp.einsum("bsd,de->bse", x, p["w_rnn_in"])
+    xi = runtime.constrain_channels_last(xi)  # keep seq unsharded (§Perf)
+    xi = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    h = rglru_scan(p, xi)
+    return jnp.einsum("bse,ed->bsd", gelu_branch * h, p["w_out"])
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d), dtype),
+    }
+
+
+def decode_rglru_block(p, x, cache, cfg):
+    """x: (B,d) → (y, new_cache)."""
+    gelu_branch = jax.nn.gelu(x @ p["w_gelu"])
+    xi = x @ p["w_rnn_in"]
+    win = jnp.concatenate([cache["conv"], xi[:, None, :]], axis=1)
+    xi_t = (
+        jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    ).astype(x.dtype)
+    h = rglru_step(p, xi_t, cache["h"])
+    y = (gelu_branch * h.astype(x.dtype)) @ p["w_out"]
+    return y, {"h": h, "conv": win[:, 1:, :]}

@@ -1,0 +1,47 @@
+"""Trace-time runtime hooks the launch layer can install into the model.
+
+``layer_param_constraint``: applied to each scanned superblock's parameter
+slice inside the layer scan.  The launch layer installs a
+``with_sharding_constraint`` that pins layer weights to their TP-only
+(compute) sharding — i.e. ZeRO-3 per-layer all-gather.  Without it GSPMD
+resolves the FSDP(d)×TP(f) weight vs activation mismatch by ALL-REDUCING the
+full (B,S,f) partial products (~1e13 B/device on gemma3-27b train, §Perf
+iteration 3) instead of all-gathering the (d, f/16) weight shard.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+_LAYER_PARAM_CONSTRAINT: Optional[Callable] = None
+_CHANNEL_CONSTRAINT: Optional[Callable] = None
+
+
+def constrain_layer_params(tree):
+    if _LAYER_PARAM_CONSTRAINT is None:
+        return tree
+    return _LAYER_PARAM_CONSTRAINT(tree)
+
+
+def constrain_channels_last(x):
+    """Pin an activation's LAST axis to the TP ('model') axis and leave the
+    sequence axis unsharded.  Used around the causal-conv shifts: if GSPMD
+    ever shards the sequence axis there, every 1-step shift becomes a halo
+    ``collective-permute`` (31k of them on mamba2 train — §Perf iter 6)."""
+    if _CHANNEL_CONSTRAINT is None:
+        return x
+    return _CHANNEL_CONSTRAINT(x)
+
+
+@contextlib.contextmanager
+def layer_param_constraint(fn: Callable, channel_fn: Optional[Callable] = None):
+    """Install hooks for the duration of a trace/lower call."""
+    global _LAYER_PARAM_CONSTRAINT, _CHANNEL_CONSTRAINT
+    prev, prev_c = _LAYER_PARAM_CONSTRAINT, _CHANNEL_CONSTRAINT
+    _LAYER_PARAM_CONSTRAINT = fn
+    _CHANNEL_CONSTRAINT = channel_fn
+    try:
+        yield
+    finally:
+        _LAYER_PARAM_CONSTRAINT = prev
+        _CHANNEL_CONSTRAINT = prev_c

@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, adam, apply_updates, cosine_schedule, sgd
+
+__all__ = ["Optimizer", "adam", "apply_updates", "cosine_schedule", "sgd"]

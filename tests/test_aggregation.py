@@ -1,0 +1,91 @@
+"""Robust aggregation: norm-trim (the paper's rule) + baselines, with
+hypothesis property tests on the invariants the Byzantine analysis needs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coordinate_median, norm_trim, norm_trim_tree, trimmed_mean
+
+
+def test_norm_trim_drops_outliers():
+    u = jnp.concatenate([jnp.ones((8, 5)), 1e6 * jnp.ones((2, 5))])
+    agg, keep = norm_trim(u, beta=0.2)
+    np.testing.assert_allclose(agg, jnp.ones(5))
+    assert keep[-2:].sum() == 0
+
+
+def test_norm_trim_keep_count():
+    u = jnp.arange(40.0).reshape(10, 4)
+    for beta, expected in [(0.1, 9), (0.3, 7), (0.5, 5)]:
+        _, keep = norm_trim(u, beta)
+        assert int(keep.sum()) == expected
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=12),  # m
+    st.integers(min_value=1, max_value=6),   # d
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_norm_trim_bounded_by_kept_max(m, d, seed):
+    """Post-trim, every surviving row's norm ≤ the (1−β)-quantile norm —
+    the key lemma behind Theorem 2's attack bound."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(m, d)) * rng.exponential(5, size=(m, 1)))
+    beta = 0.25
+    agg, keep = norm_trim(u, beta)
+    n_keep = max(1, int(round((1 - beta) * m)))
+    norms = np.linalg.norm(np.asarray(u), axis=1)
+    thresh = np.sort(norms)[n_keep - 1]
+    kept_norms = norms[np.asarray(keep) > 0]
+    assert (kept_norms <= thresh + 1e-6).all()
+    # aggregate norm bounded by the threshold too (mean of vectors ≤ max norm)
+    assert np.linalg.norm(np.asarray(agg)) <= thresh + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_norm_trim_permutation_invariant_aggregate(seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(9, 7)))
+    perm = rng.permutation(9)
+    a1, _ = norm_trim(u, 0.3)
+    a2, _ = norm_trim(u[perm], 0.3)
+    np.testing.assert_allclose(a1, a2, atol=1e-5)
+
+
+def test_norm_trim_tree_matches_flat():
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.normal(size=(6, 10)))
+    tree = {"a": flat[:, :4], "b": {"c": flat[:, 4:]}}
+    agg_t, keep_t = norm_trim_tree(tree, 0.34)
+    agg_f, keep_f = norm_trim(flat, 0.34)
+    np.testing.assert_allclose(keep_t, keep_f)
+    np.testing.assert_allclose(
+        jnp.concatenate([agg_t["a"], agg_t["b"]["c"]]), agg_f, atol=1e-6
+    )
+
+
+def test_trimmed_mean_and_median_resist_outliers():
+    u = jnp.concatenate([jnp.zeros((8, 3)), 1e9 * jnp.ones((2, 3))])
+    assert float(jnp.abs(trimmed_mean(u, 0.2)).max()) == 0.0
+    assert float(jnp.abs(coordinate_median(u)).max()) == 0.0
+
+
+def test_mean_is_not_robust():
+    u = jnp.concatenate([jnp.zeros((8, 3)), 1e9 * jnp.ones((2, 3))])
+    assert float(jnp.abs(u.mean(0)).max()) > 1e8  # the contrast the paper draws
+
+
+def test_krum_selects_inlier():
+    from repro.core import krum
+    import numpy as np
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    good = jnp.asarray(rng.normal(0, 0.1, size=(8, 6)) + 1.0)
+    bad = jnp.asarray(rng.normal(50, 1.0, size=(2, 6)))
+    u = jnp.concatenate([good, bad])
+    sel = krum(u, n_byz=2)
+    assert float(jnp.abs(sel - 1.0).max()) < 1.0  # picked a good worker

@@ -1,0 +1,39 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LABEL_ATTACKS, UPDATE_ATTACKS, byzantine_mask
+
+
+def test_mask_fraction():
+    assert int(byzantine_mask(20, 0.2).sum()) == 4
+    assert int(byzantine_mask(20, 0.0).sum()) == 0
+
+
+def test_update_attacks_touch_only_byzantine():
+    key = jax.random.PRNGKey(0)
+    u = jnp.ones((10, 6))
+    mask = byzantine_mask(10, 0.3)
+    for name in ("gaussian", "negative", "saddle"):
+        out = UPDATE_ATTACKS[name](key, u, mask)
+        np.testing.assert_allclose(out[3:], u[3:])  # good workers untouched
+        assert not np.allclose(out[:3], u[:3])
+
+
+def test_negative_update_direction():
+    key = jax.random.PRNGKey(0)
+    u = jnp.ones((4, 3))
+    out = UPDATE_ATTACKS["negative"](key, u, byzantine_mask(4, 0.5), c=0.9)
+    np.testing.assert_allclose(out[0], -0.9 * u[0])
+
+
+def test_label_attacks():
+    key = jax.random.PRNGKey(0)
+    y = jnp.ones((6, 20))
+    mask = byzantine_mask(6, 0.34)
+    flipped = LABEL_ATTACKS["flipped_label"](key, y, mask, num_classes=2)
+    np.testing.assert_allclose(flipped[:2], 0.0)
+    np.testing.assert_allclose(flipped[2:], 1.0)
+    rnd = LABEL_ATTACKS["random_label"](key, y, mask, num_classes=2)
+    np.testing.assert_allclose(rnd[2:], 1.0)
+    assert 0.2 < float(rnd[:2].mean()) < 0.8  # actually randomized

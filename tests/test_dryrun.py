@@ -1,0 +1,80 @@
+"""Dry-run machinery tests.
+
+Sharding-spec construction runs in-process (pure metadata, no devices); the
+actual 512-device lower+compile runs in a subprocess because the XLA
+host-device-count flag must be set before jax initializes (and the rest of
+the suite needs the real 1-CPU topology).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES
+from repro.launch.specs import skip_reason
+from repro.models import build_model
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_skip_policy():
+    long = INPUT_SHAPES["long_500k"]
+    assert skip_reason(ARCHS["llama3-405b"], long) is not None
+    assert skip_reason(ARCHS["mamba2-780m"], long) is None
+    assert skip_reason(ARCHS["recurrentgemma-9b"], long) is None
+    assert skip_reason(ARCHS["gemma3-27b"], long) is None
+    assert skip_reason(ARCHS["whisper-medium"], long) is not None
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        for a in ARCHS.values():
+            assert skip_reason(a, INPUT_SHAPES[s]) is None
+
+
+def test_param_specs_cover_all_leaves():
+    """Every param leaf of every arch gets a valid, shape-compatible spec."""
+    from repro.launch.sharding import param_specs
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for name, cfg in ARCHS.items():
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        specs = param_specs(shapes, FakeMesh())
+        flat_s, _ = jax.tree_util.tree_flatten(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        flat_p, _ = jax.tree_util.tree_flatten(shapes)
+        assert len(flat_s) == len(flat_p), name
+        for spec, leaf in zip(flat_s, flat_p):
+            assert len(spec) <= leaf.ndim, (name, spec, leaf.shape)
+            # divisibility of sharded dims
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a in axes:
+                    n *= FakeMesh.shape[a]
+                assert dim % n == 0, (name, spec, leaf.shape)
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_pair():
+    """One real 512-host-device lower+compile through the CLI."""
+    env = {**os.environ, "PYTHONPATH": SRC}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-780m", "--shape", "decode_32k",
+         "--json", "/tmp/test_dryrun.jsonl"],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.loads(open("/tmp/test_dryrun.jsonl").readlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["flops_per_device"] > 0

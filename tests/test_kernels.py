@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (mandated by the
+brief), executed in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention_bshd, cubic_step, flash_attention, rmsnorm
+from repro.kernels.cubic_step import cubic_solve_fused
+from repro.kernels.ref import cubic_step_ref, flash_attention_ref, rmsnorm_ref
+from repro.core import solve_cubic_exact
+
+
+@pytest.mark.parametrize("B,H,S,Dh", [(1, 1, 128, 64), (2, 3, 256, 64), (1, 2, 256, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, S, Dh, causal, dtype, rng):
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (B, H, S, Dh), dtype)
+    k = jax.random.normal(kk, (B, H, S, Dh), dtype)
+    v = jax.random.normal(kv, (B, H, S, Dh), dtype)
+    o = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    r = flash_attention_ref(q, k, v, causal=causal)
+    atol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        o.astype(jnp.float32), r.astype(jnp.float32), atol=atol
+    )
+
+
+@pytest.mark.parametrize("window", [64, 128, 192])
+def test_flash_attention_window(window, rng):
+    B, H, S, Dh = 1, 2, 384, 64
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (B, H, S, Dh))
+    k = jax.random.normal(kk, (B, H, S, Dh))
+    v = jax.random.normal(kv, (B, H, S, Dh))
+    o = flash_attention(q, k, v, causal=True, window=window, block_q=64, block_k=64)
+    r = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(o, r, atol=2e-6)
+
+
+def test_flash_attention_block_shape_invariance(rng):
+    B, H, S, Dh = 1, 2, 256, 64
+    q = jax.random.normal(rng, (B, H, S, Dh))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, H, S, Dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, H, S, Dh))
+    o1 = flash_attention(q, k, v, block_q=64, block_k=64)
+    o2 = flash_attention(q, k, v, block_q=128, block_k=32)
+    np.testing.assert_allclose(o1, o2, atol=2e-6)
+
+
+def test_attention_bshd_gqa(rng):
+    """ops.py wrapper: (B,S,H,Dh) layout + GQA kv repetition."""
+    B, S, H, Hkv, Dh = 2, 128, 4, 2, 64
+    q = jax.random.normal(rng, (B, S, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, Hkv, Dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, Hkv, Dh))
+    o = attention_bshd(q, k, v, causal=True, block_q=64, block_k=64)
+    from repro.models.attention import reference_attention
+
+    r = reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(o, r, atol=2e-6)
+
+
+@pytest.mark.parametrize("d", [64, 123, 300])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_cubic_step_sweep(d, dtype, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    A = jax.random.normal(k1, (d, d), dtype)
+    H = (A + A.T) / 2
+    g = jax.random.normal(k2, (d,), dtype)
+    s = jax.random.normal(k3, (d,), dtype)
+    o = cubic_step(s, g, H, M=10.0, gamma=1.0, lr=1e-2)
+    r = cubic_step_ref(s, g, H, M=10.0, gamma=1.0, lr=1e-2)
+    np.testing.assert_allclose(o, r, atol=1e-5)
+
+
+def test_cubic_solve_fused_matches_exact(rng):
+    d = 64
+    A = jax.random.normal(rng, (d, d))
+    H = (A + A.T) / 2
+    g = jax.random.normal(jax.random.fold_in(rng, 1), (d,))
+    s = cubic_solve_fused(g, H, n_iters=4000)
+    s_ex = solve_cubic_exact(g, H)
+    np.testing.assert_allclose(s, s_ex, atol=1e-3)
+
+
+@pytest.mark.parametrize("N,d", [(128, 256), (256, 512), (64, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(N, d, dtype, rng):
+    x = jax.random.normal(rng, (N, d), dtype)
+    w = 0.1 * jax.random.normal(jax.random.fold_in(rng, 1), (d,), jnp.float32)
+    o = rmsnorm(x, w, block_rows=64)
+    r = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        o.astype(jnp.float32), r.astype(jnp.float32), atol=1e-2 if dtype == jnp.bfloat16 else 1e-5
+    )

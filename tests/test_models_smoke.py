@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests (mandated by the brief): a REDUCED variant
+of each assigned architecture runs one forward/train step on CPU with shape
+and finiteness assertions, plus decode-vs-forward consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, VARIANTS
+from repro.models import build_model
+
+ALL = sorted(ARCHS)
+
+
+def _batch(cfg, key, B=2, S=32):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["prefix_emb"] = jax.random.normal(
+            key, (B, cfg.num_prefix_tokens, cfg.d_model)
+        )
+    if cfg.family == "audio":
+        batch["enc_emb"] = jax.random.normal(key, (B, cfg.encoder_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_forward_and_loss(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 32
+    batch = _batch(cfg, rng, B, S)
+    logits, aux = model.forward(
+        params,
+        batch["tokens"],
+        prefix_emb=batch.get("prefix_emb"),
+        enc_emb=batch.get("enc_emb"),
+    )
+    S_total = S + (cfg.num_prefix_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    loss = jax.jit(model.loss_fn)(params, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_one_train_grad_step(arch, rng):
+    """One SGD step on the reduced config: gradients finite, loss drops."""
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    loss0, grads = jax.jit(jax.value_and_grad(model.loss_fn))(params, batch)
+    assert bool(jnp.isfinite(loss0))
+    finite = jax.tree_util.tree_map(lambda g: bool(jnp.isfinite(g).all()), grads)
+    assert all(jax.tree_util.tree_leaves(finite))
+    # MoE needs a smaller probe step: top-k routing flips make the loss
+    # piecewise and non-monotone at large steps.
+    lr = 0.003 if cfg.num_experts else 0.05
+    params2 = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    loss1 = jax.jit(model.loss_fn)(params2, batch)
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_decode_step_shapes(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    B = 2
+    cache = model.init_cache(B, 64)
+    logits, cache2 = jax.jit(model.decode_step)(
+        params, cache, jnp.zeros((B,), jnp.int32), jnp.int32(0)
+    )
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree_util.tree_structure(cache) == jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["llama3-405b", "mamba2-780m", "gemma3-27b", "recurrentgemma-9b",
+     "deepseek-moe-16b"],
+)
+def test_decode_matches_forward(arch, rng):
+    """Token-by-token decode reproduces the training-path logits — the
+    KV-cache/rolling-window/SSM-state plumbing is exact."""
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, T = 2, 12
+    toks = jax.random.randint(rng, (B, T), 0, cfg.vocab_size)
+    logits_fwd, _ = model.forward(params, toks)
+    cache = model.init_cache(B, 32)
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        lg, cache = step(params, cache, toks[:, t], jnp.int32(t))
+        err = float(jnp.abs(lg - logits_fwd[:, t]).max())
+        assert err < 2e-4, (t, err)
+
+
+def test_swa_variant_exists():
+    assert "llama3-405b-swa" in VARIANTS
+    assert VARIANTS["llama3-405b-swa"].supports_long_context

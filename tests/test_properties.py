@@ -1,0 +1,83 @@
+"""Hypothesis property tests on the system's numerical invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import norm_trim, solve_cubic_exact, cubic_model_value
+from repro.models.attention import chunked_attention, reference_attention
+from repro.models.mamba2 import ssd_chunked, ssd_reference
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=3),    # batch
+    st.sampled_from([16, 32, 48]),            # seq
+    st.integers(min_value=1, max_value=3),    # heads
+    st.sampled_from([4, 8]),                  # head dim P
+    st.sampled_from([3, 5]),                  # state N
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_ssd_chunked_equals_recurrence(b, S, H, P, N, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    B = jax.random.normal(ks[1], (b, S, N)) * 0.5
+    C = jax.random.normal(ks[2], (b, S, N)) * 0.5
+    log_a = -jax.nn.softplus(jax.random.normal(ks[3], (b, S, H)))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (b, S, H)))
+    y1 = ssd_chunked(x, B, C, log_a, dt, 16)
+    y2 = ssd_reference(x, B, C, log_a, dt)
+    np.testing.assert_allclose(y1, y2, atol=5e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([32, 48, 64]),            # seq
+    st.sampled_from([8, 16]),                 # q chunk
+    st.sampled_from([8, 16]),                 # kv chunk
+    st.booleans(),                            # causal
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_chunked_attention_equals_reference(S, qc, kc, causal, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, S, 2, 8))
+    k = jax.random.normal(kk, (1, S, 1, 8))
+    v = jax.random.normal(kv, (1, S, 1, 8))
+    a = chunked_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    b = reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_cubic_solution_never_increases_model(seed):
+    """m(s*) ≤ m(0) = 0 for the sub-problem — the descent lemma's engine."""
+    key = jax.random.PRNGKey(seed)
+    d = 12
+    A = jax.random.normal(key, (d, d))
+    H = (A + A.T) / 2
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    s = solve_cubic_exact(g, H)
+    assert float(cubic_model_value(s, g, H)) <= 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=16),
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_norm_trim_scale_equivariant(m, seed):
+    """norm_trim(c·U) = c·norm_trim(U) for c > 0 (the rule only ranks).
+    Rows are given well-separated norms: with near-tied norms the float
+    ranking can legitimately flip under scaling (a boundary condition of
+    any float-based rank rule, found by hypothesis)."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(m, 5)))
+    u = u / jnp.linalg.norm(u, axis=1, keepdims=True)  # unit rows…
+    u = u * (1.0 + jnp.arange(m, dtype=jnp.float32))[rng.permutation(m), None]
+    a1, k1 = norm_trim(u, 0.25)
+    a2, k2 = norm_trim(3.5 * u, 0.25)
+    np.testing.assert_allclose(3.5 * a1, a2, rtol=1e-5)
+    np.testing.assert_array_equal(k1, k2)

@@ -1,0 +1,153 @@
+"""Data pipeline, optimizers, checkpointing, tree utils, HLO analyzer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core.tree_util import (
+    tree_axpy,
+    tree_dot,
+    tree_norm,
+    tree_randn_like,
+    tree_size,
+    tree_zeros_like,
+)
+from repro.data import TokenStream, WorkerBatcher, make_classification, paper_dataset
+from repro.launch.hlo import analyze_hlo
+from repro.optim import adam, apply_updates, cosine_schedule, sgd
+
+
+# ------------------------------ data --------------------------------------
+
+
+def test_token_stream_deterministic():
+    s = TokenStream(1000, seed=3)
+    a1, b1 = s.batch(5, 4, 16)
+    a2, b2 = s.batch(5, 4, 16)
+    np.testing.assert_array_equal(a1, a2)
+    assert a1.shape == (4, 16) and b1.shape == (4, 16)
+    assert int(a1.max()) < 1000
+
+
+def test_token_stream_learnable_structure():
+    """Odd positions are a deterministic shift of their predecessor."""
+    s = TokenStream(1000, seed=0)
+    toks, targets = s.batch(0, 2, 33)
+    np.testing.assert_array_equal(np.asarray(toks[:, 1:]), np.asarray(targets[:, :-1]))
+
+
+def test_worker_batcher_shapes():
+    cfg = get_config("internvl2-76b").reduced()
+    b = WorkerBatcher(cfg, 4, 8, 32, 0)
+    batch = b(0)
+    assert batch["tokens"].shape == (4, 2, 32 - cfg.num_prefix_tokens)
+    assert batch["prefix_emb"].shape == (4, 2, cfg.num_prefix_tokens, cfg.d_model)
+
+
+def test_paper_dataset_shapes():
+    from repro.configs import PAPER_WORKLOADS
+
+    d = paper_dataset(PAPER_WORKLOADS["a9a-logistic"])
+    assert d["X_workers"].shape[0] == 20
+    assert d["X_workers"].shape[2] == 123
+    assert d["X_test"].shape == (9600, 123)
+
+
+# ------------------------------ optim --------------------------------------
+
+
+def _quad_loss(w):
+    return 0.5 * jnp.sum(w * w)
+
+
+@pytest.mark.parametrize("opt", [sgd(0.2), sgd(0.2, momentum=0.9), adam(0.2)])
+def test_optimizers_descend(opt):
+    w = {"a": jnp.ones(5), "b": {"c": 2.0 * jnp.ones(3)}}
+    state = opt.init(w)
+    for _ in range(50):
+        g = jax.grad(lambda p: _quad_loss(jnp.concatenate([p["a"], p["b"]["c"]])))(w)
+        upd, state = opt.update(g, state, w)
+        w = apply_updates(w, upd)
+    assert float(tree_norm(w)) < 0.2
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) < 0.01
+
+
+# ------------------------------ checkpoint ---------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {
+        "w": jnp.arange(6.0).reshape(2, 3),
+        "nested": {"b": jnp.ones(4, jnp.bfloat16)},
+    }
+    save_checkpoint(str(tmp_path / "ck"), params, 7, {"loss": 1.0})
+    restored, step = load_checkpoint(str(tmp_path / "ck"), params)
+    assert step == 7
+    np.testing.assert_array_equal(restored["w"], params["w"])
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+# ------------------------------ tree utils ---------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_tree_dot_matches_flat(seed):
+    key = jax.random.PRNGKey(seed)
+    t1 = {"a": jax.random.normal(key, (3, 4)), "b": jax.random.normal(key, (5,))}
+    t2 = tree_randn_like(jax.random.fold_in(key, 1), t1)
+    flat1 = jnp.concatenate([t1["a"].ravel(), t1["b"]])
+    flat2 = jnp.concatenate([t2["a"].ravel(), t2["b"]])
+    np.testing.assert_allclose(tree_dot(t1, t2), flat1 @ flat2, rtol=1e-5)
+
+
+def test_tree_axpy_size_zeros():
+    t = {"a": jnp.ones((2, 2)), "b": jnp.ones(3)}
+    assert tree_size(t) == 7
+    z = tree_zeros_like(t)
+    out = tree_axpy(2.0, t, z)
+    np.testing.assert_allclose(out["a"], 2.0)
+
+
+# ------------------------------ HLO analyzer -------------------------------
+
+
+def test_hlo_analyzer_scan_flops():
+    """Loop-aware flop counting: a scan of n matmuls counts n×, not 1×."""
+    n, d = 8, 16
+
+    def f(xs, w):
+        def body(c, x):
+            return c @ w + x, ()
+        c, _ = jax.lax.scan(body, xs[0], xs)
+        return c
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((n, d, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+    ).compile()
+    a = analyze_hlo(comp.as_text())
+    expected = n * 2 * d**3
+    assert expected <= a["flops"] <= 1.5 * expected
+    assert a["unknown_loops"] == 0
+
+
+def test_hlo_analyzer_simple_matmul():
+    f = lambda x, w: x @ w
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+    ).compile()
+    a = analyze_hlo(comp.as_text())
+    assert abs(a["flops"] - 2 * 32 * 64 * 128) / (2 * 32 * 64 * 128) < 0.1
