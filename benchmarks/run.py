@@ -83,6 +83,23 @@ def main(argv=None) -> None:
         )
     all_results["table1"] = t1
 
+    # ---- Table 1 (compression axis): bits on the wire ---------------------
+    t0 = time.time()
+    tc = table1_communication.run_compression(
+        dataset="w8a" if args.full else "a9a",
+    )
+    dt = time.time() - t0
+    for row in tc:
+        _emit(
+            f"table1_compression/{row['compressor']}",
+            dt / max(len(tc), 1) * 1e6 / 100,
+            f"rounds={row['rounds']} bits/round={row['bits_per_round']} "
+            f"total_bits={row['wire_bits_total']} "
+            f"overhead={row['round_overhead']:.2f}x "
+            f"bits_saving={row['bits_saving']:.1f}x",
+        )
+    all_results["table1_compression"] = tc
+
     # ---- Saddle escape (beyond-paper; Theorems 1-2 exercised directly) ----
     t0 = time.time()
     se = saddle_escape.run(T=15 if not args.full else 25)

@@ -1,14 +1,24 @@
-"""Table 1 + §6 comparison — communication rounds to the gradient stopping
-criterion: our cubic Newton vs ByzantinePGD [YCKB19]
-(R=10, r=5, Q=10, T_th=10, coordinate-wise trimmed mean — their settings).
+"""Table 1 + §6 comparison — communication cost to the gradient stopping
+criterion, in ROUNDS *and* BITS ON THE WIRE.
 
-Paper numbers: ByzantinePGD ≈ 198–212 rounds, ours ≈ 2–16 (w8a robust
-regression); non-Byzantine §6: 257 vs 7 ⇒ the 36× claim.
+Rounds: our cubic Newton vs ByzantinePGD [YCKB19] (R=10, r=5, Q=10,
+T_th=10, coordinate-wise trimmed mean — their settings).  Paper numbers:
+ByzantinePGD ≈ 198–212 rounds, ours ≈ 2–16 (w8a robust regression);
+non-Byzantine §6: 257 vs 7 ⇒ the 36× claim.
+
+Bits: every row also reports exact uplink wire cost (m workers × payload
+bits × rounds; see repro.compression's per-compressor accounting), and
+:func:`run_compression` sweeps δ-approximate compressors (none / top-k /
+sign+norm / int8) on the same stopping criterion — the paper's
+rounds-vs-accuracy story gains a compression-ratio axis: top-k at
+k/d = 0.1 pays ~7.8× fewer bits per round on w8a (1230 vs 9600) and
+must stay within 2× the uncompressed round count.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.compression import make_compressor
 from repro.configs import PAPER_WORKLOADS
 from repro.core import (
     AttackConfig,
@@ -23,12 +33,20 @@ from .problems import robust_regression_loss
 
 ATTACKS = ("gaussian", "flipped_label", "negative", "random_label")
 
+# ≥3 compressors for the wire-cost sweep (acceptance floor: none/topk/sign)
+COMPRESSOR_SWEEP = (None, "topk:0.1", "signnorm", "int8")
+
+
+def _spec_name(spec):
+    return "none" if spec is None else spec
+
 
 def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
         grad_tol=0.02, max_rounds=400, newton_budget=60, seed=0):
     wl = PAPER_WORKLOADS[f"{dataset}-robust"]
     data = paper_dataset(wl, seed)
     m = wl.m_workers
+    d = wl.dim
     w0 = jnp.zeros(wl.dim)
     rows = []
 
@@ -52,12 +70,18 @@ def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
             w0, data["X_workers"], data["y_workers"],
             max_rounds=max_rounds, grad_tol=grad_tol,
         )
+        # PGD ships one full-precision d-gradient per worker per round
+        pgd_bits = h_p["rounds"] * m * 32 * d
         return {
             "attack": attack,
             "alpha": alpha,
             "newton_rounds": h_n["rounds"],
             "pgd_rounds": h_p["rounds"],
             "speedup": h_p["rounds"] / max(h_n["rounds"], 1),
+            "newton_wire_bits": h_n["wire_bits"],
+            "newton_bits_per_round": h_n["wire_bits"] // max(h_n["rounds"], 1),
+            "pgd_wire_bits": pgd_bits,
+            "bits_speedup": pgd_bits / max(h_n["wire_bits"], 1),
         }
 
     # non-Byzantine headline comparison (the 36× claim)
@@ -65,4 +89,58 @@ def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
     for attack in attacks:
         for alpha in alphas:
             rows.append(one(attack, alpha))
+    return rows
+
+
+def run_compression(dataset="w8a", compressors=COMPRESSOR_SWEEP,
+                    attack="none", alpha=0.0, grad_tol=0.02,
+                    newton_budget=60, seed=0):
+    """Rounds AND bits to the gradient stopping criterion, per compressor.
+
+    Same workload/criterion as :func:`run`'s Newton arm; each row reports
+    the compressor's per-round uplink cost (m × payload bits), the total
+    rounds×bits spend, and the round overhead vs the uncompressed run —
+    the acceptance bar is topk:0.1 within 2× of none on w8a-robust.
+    """
+    wl = PAPER_WORKLOADS[f"{dataset}-robust"]
+    data = paper_dataset(wl, seed)
+    m, d = wl.m_workers, wl.dim
+    w0 = jnp.zeros(d)
+    beta = alpha + 2.0 / m if alpha > 0 else 0.1
+    rows = []
+    for spec in compressors:
+        newton = DistributedCubicNewton(
+            robust_regression_loss,
+            NewtonConfig(M=10.0, eta=1.0, beta=beta, compressor=spec),
+            AttackConfig(name=attack, alpha=alpha),
+        )
+        _, h = newton.run(
+            w0, data["X_workers"], data["y_workers"], newton_budget,
+            grad_tol=grad_tol,
+        )
+        comp = make_compressor(spec, d)
+        rows.append({
+            "compressor": _spec_name(spec),
+            "rounds": h["rounds"],
+            "reached_tol": h["grad_norm"][-1] <= grad_tol,
+            "grad_norm": h["grad_norm"][-1],
+            "bits_per_round": newton.wire_bits_per_step(d, m),
+            "payload_bits_per_worker": (
+                comp.wire_bits(d) if comp is not None else 32 * d
+            ),
+            "wire_bits_total": h["wire_bits"],
+            "delta_bound": (
+                comp.delta_bound(d) if comp is not None else 1.0
+            ),
+        })
+    base = next((r for r in rows if r["compressor"] == "none"), None)
+    for r in rows:
+        # relative columns only exist when the sweep includes a baseline
+        r["round_overhead"] = (
+            r["rounds"] / max(base["rounds"], 1) if base else None
+        )
+        r["bits_saving"] = (
+            base["wire_bits_total"] / max(r["wire_bits_total"], 1)
+            if base else None
+        )
     return rows

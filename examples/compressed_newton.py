@@ -1,0 +1,46 @@
+"""Compressed worker→center communication: the paper's third pillar.
+
+Runs the same Byzantine logistic-regression workload as quickstart.py
+under every δ-approximate compressor in the registry and prints the
+wire-cost / rounds trade-off — top-k at k/d = 0.1 ships ~8× fewer
+uplink bits per round and (with EF21 error feedback, the default) stays
+within ~2× of the uncompressed round count.
+
+    PYTHONPATH=src python examples/compressed_newton.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import AttackConfig, DistributedCubicNewton, NewtonConfig
+from repro.data import make_classification, shard_to_workers
+
+
+def logistic_loss(w, X, y):
+    z = X @ w
+    yy = 2.0 * y - 1.0
+    return jnp.mean(jnp.log1p(jnp.exp(-yy * z))) + 1e-3 * w @ w
+
+
+def main():
+    m, alpha, d = 20, 0.2, 60
+    X, y, _ = make_classification(jax.random.PRNGKey(0), 8000, d, margin=3.0)
+    Xw, yw = shard_to_workers(X, y, m)
+
+    print(f"{'compressor':>10s} {'bits/round':>10s} {'rounds':>6s} "
+          f"{'grad_norm':>9s} {'acc':>6s}")
+    for spec in (None, "topk:0.1", "randk:0.1", "signnorm", "int8"):
+        algo = DistributedCubicNewton(
+            logistic_loss,
+            NewtonConfig(M=10.0, eta=1.0, beta=alpha + 2.0 / m,
+                         compressor=spec),
+            AttackConfig(name="gaussian", alpha=alpha, sigma=50.0),
+        )
+        w, hist = algo.run(jnp.zeros(d), Xw, yw, n_steps=40, grad_tol=0.05)
+        acc = float(((X @ w > 0) == (y > 0.5)).mean())
+        print(f"{str(spec or 'none'):>10s} "
+              f"{algo.wire_bits_per_step(d, m):>10d} {hist['rounds']:>6d} "
+              f"{hist['grad_norm'][-1]:>9.4f} {acc:>6.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Compression — δ-approximate worker→center communication (paper §1's
+third pillar; COMRADE's compressed second-order updates).
+
+* :mod:`repro.compression.base` — the δ-approximate :class:`Compressor`
+  protocol, identity compressor, wire-format bit accounting.
+* :mod:`repro.compression.sparsify` — top-k / random-k sparsification
+  (static k, jit/vmap-safe; optional fused Pallas top-k kernel path).
+* :mod:`repro.compression.sign` — scaled-sign (sign+norm), 1 bit/coord.
+* :mod:`repro.compression.quant` — block-wise int8 quantization.
+* :mod:`repro.compression.error_feedback` — EF / EF21 memory wrappers so
+  biased compressors retain convergence.
+* :mod:`repro.compression.tree` — pytree-aware per-leaf compression for
+  the mesh runtime (static shapes per leaf, worker-stacked vmap layout).
+* :mod:`repro.compression.registry` — spec strings ("topk:0.1", …) →
+  compressors, the form configs carry.
+"""
+from .base import Compressor, Identity, index_bits
+from .error_feedback import EF21, ErrorFeedback, make_error_feedback
+from .quant import BlockInt8
+from .registry import COMPRESSORS, make_compressor
+from .sign import SignNorm
+from .sparsify import RandomK, TopK
+from .tree import TreeCompressor
+
+__all__ = [
+    "BlockInt8",
+    "COMPRESSORS",
+    "Compressor",
+    "EF21",
+    "ErrorFeedback",
+    "Identity",
+    "RandomK",
+    "SignNorm",
+    "TopK",
+    "TreeCompressor",
+    "index_bits",
+    "make_compressor",
+    "make_error_feedback",
+]

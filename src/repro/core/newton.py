@@ -3,7 +3,9 @@
 This module is the *paper-faithful* runtime: m workers simulated on one
 process, explicit per-worker gradients / Hessians (the paper's LIBSVM regime,
 d ≤ a few hundred), the paper's Algorithm 2 inner solver, the four Byzantine
-attacks, and norm-based thresholding at the center.  It reproduces Figures
+attacks, norm-based thresholding at the center, and (§1's third pillar)
+δ-approximate compression of the worker→center updates with error
+feedback and exact wire-bit accounting (:mod:`repro.compression`).  It reproduces Figures
 1–3 and Table 1.
 
 The at-scale (mesh-sharded, matrix-free) variant for the assigned
@@ -21,6 +23,7 @@ import jax.numpy as jnp
 from . import attacks as attacks_lib
 from .aggregation import AGGREGATORS, norm_trim
 from .cubic import solve_cubic_gd
+from ..compression import make_compressor, make_error_feedback
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +38,12 @@ class NewtonConfig:
     solver_iters: int = 500  # cap for Algorithm 2's while-loop
     exact_gradient: bool = False  # Remark 5: extra round ⇒ ε_g = 0
     momentum: float = 0.0    # beyond-paper: CR-with-momentum [WZLL20]
+    # δ-approximate compression of the worker→center update s_i (§1's
+    # third pillar / COMRADE): a repro.compression spec string, e.g.
+    # "topk:0.1", "signnorm", "int8" — None ⇒ full precision.
+    compressor: Optional[str] = None
+    error_feedback: str = "ef21"  # "none" | "ef" | "ef21" (tracking)
+    ef_damping: float = 0.75      # θ; mid-plateau on w8a (see error_feedback.py)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,11 +92,11 @@ class DistributedCubicNewton:
             max_iters=cfg.solver_iters,
         )
 
-    def _step_impl(self, w, v, X, y, key):
+    def _step_impl(self, w, v, e, X, y, key):
         cfg, atk = self.config, self.attack
         m = X.shape[0]
         mask = attacks_lib.byzantine_mask(m, atk.alpha)
-        k_label, k_update = jax.random.split(key)
+        k_label, k_update, k_comp = jax.random.split(key, 3)
 
         # Data-level attacks corrupt Byzantine workers' labels *before* the
         # local computation (they "train on wrong labels", §6).
@@ -109,6 +118,23 @@ class DistributedCubicNewton:
             lambda Xi, yi: self._worker_solve(w, Xi, yi, global_g)
         )(X, y_used)
 
+        # Honest workers δ-compress s_i before transmitting, with EF/EF21
+        # memory carrying the compression residual across rounds.
+        # Byzantine workers send arbitrary payloads anyway, so the update
+        # attacks below corrupt the *reconstructed* vectors.
+        comp = make_compressor(cfg.compressor, w.shape[0])
+        if comp is not None:
+            ef = make_error_feedback(cfg.error_feedback, comp, cfg.ef_damping)
+            keys = jax.random.split(k_comp, m)
+            if ef is not None:
+                s, e = jax.vmap(lambda xi, ei, ki: ef.apply(xi, ei, key=ki))(
+                    s, e, keys
+                )
+            else:
+                s = jax.vmap(lambda xi, ki: comp.roundtrip(xi, key=ki))(
+                    s, keys
+                )
+
         # Update-level attacks corrupt what Byzantine workers *send*.
         if atk.name in attacks_lib.UPDATE_ATTACKS and atk.name != "none":
             s = attacks_lib.UPDATE_ATTACKS[atk.name](
@@ -124,7 +150,7 @@ class DistributedCubicNewton:
         # cited in §2; the paper itself uses v ≡ agg, i.e. momentum = 0)
         v_new = cfg.momentum * v + agg
         w_new = w + cfg.eta * v_new
-        return w_new, v_new, {
+        return w_new, v_new, e, {
             "update_norms": jnp.linalg.norm(s, axis=-1), "keep": keep,
         }
 
@@ -136,9 +162,24 @@ class DistributedCubicNewton:
         return {}
 
     # ------------------------------------------------------------------
-    def step(self, w, X, y, key, v=None):
+    def step(self, w, X, y, key, v=None, e=None):
+        """One round.  Returns (w, v, e, info) where ``e`` is the workers'
+        (m, d) error-feedback memory (zeros when compression is off)."""
         v = jnp.zeros_like(w) if v is None else v
-        return self._step(w, v, X, y, key)
+        e = self._init_error(w, X.shape[0]) if e is None else e
+        return self._step(w, v, e, X, y, key)
+
+    def _init_error(self, w, m):
+        return jnp.zeros((m, w.shape[0]), jnp.float32)
+
+    def wire_bits_per_step(self, d: int, m: int) -> int:
+        """Exact uplink bits one *step* costs: m compressed s_i payloads,
+        plus (in two-round mode) m full-precision local gradients."""
+        comp = make_compressor(self.config.compressor, d)
+        bits = m * (comp.wire_bits(d) if comp is not None else 32 * d)
+        if self.config.exact_gradient:
+            bits += m * 32 * d   # Remark-5 gradient round is uncompressed
+        return bits
 
     def run(
         self,
@@ -160,13 +201,17 @@ class DistributedCubicNewton:
         gradf = jax.jit(jax.grad(self.loss_fn))
         lossf = jax.jit(self.loss_fn)
 
-        hist = {"loss": [], "grad_norm": [], "eval": [], "rounds": 0}
+        hist = {"loss": [], "grad_norm": [], "eval": [], "rounds": 0,
+                "wire_bits": 0}
+        bits_per_step = self.wire_bits_per_step(w0.shape[0], X.shape[0])
         w = w0
         v = jnp.zeros_like(w0)
+        e = self._init_error(w0, X.shape[0])
         for t in range(n_steps):
             key, sub = jax.random.split(key)
-            w, v, _ = self.step(w, X, y, sub, v)
+            w, v, e, _ = self.step(w, X, y, sub, v, e)
             hist["rounds"] += self.rounds_per_step
+            hist["wire_bits"] += bits_per_step
             gn = float(jnp.linalg.norm(gradf(w, Xf, yf)))
             hist["loss"].append(float(lossf(w, Xf, yf)))
             hist["grad_norm"].append(gn)

@@ -4,6 +4,8 @@
   (the prefill/train hot loop of every attention arch).
 * :mod:`cubic_step` — fused Algorithm-2 inner iteration for the paper's
   explicit-Hessian regime (the solver hot loop of the reproduction).
+* :mod:`topk_compress` — fused top-k compression payload (threshold
+  bisection + MXU pack), the wire hot-spot of repro.compression.
 * :mod:`rmsnorm` — row-tiled RMSNorm.
 
 Each has a pure-jnp oracle in :mod:`ref` and a jit wrapper in :mod:`ops`;
@@ -16,6 +18,8 @@ from .ops import (
     flash_attention,
     rmsnorm,
     rmsnorm_nd,
+    topk_compress,
+    topk_decompress,
 )
 
 __all__ = [
@@ -25,4 +29,6 @@ __all__ = [
     "flash_attention",
     "rmsnorm",
     "rmsnorm_nd",
+    "topk_compress",
+    "topk_decompress",
 ]

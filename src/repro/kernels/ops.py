@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from .cubic_step import cubic_solve_fused, cubic_step
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
+from .topk_compress import topk_compress, topk_decompress
 
 
 def attention_bshd(q, k, v, *, causal=True, window=0, **kw):
@@ -48,4 +49,6 @@ __all__ = [
     "flash_attention",
     "rmsnorm",
     "rmsnorm_nd",
+    "topk_compress",
+    "topk_decompress",
 ]

@@ -38,6 +38,14 @@ def cubic_step_ref(s, g, H, *, M, gamma, lr):
     return (s32 - lr * G).astype(s.dtype)
 
 
+def topk_compress_ref(x, k):
+    """Packed top-|x| payload in index-ascending order (the wire format of
+    repro.compression.TopK): values (k,), indices (k,) int32."""
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    idx = jnp.sort(idx)
+    return x[idx], idx.astype(jnp.int32)
+
+
 def rmsnorm_ref(x, w, eps=1e-6):
     """x: (N, d), w: (d,).  Gemma-style (1+w) scaling, fp32 accumulation."""
     x32 = x.astype(jnp.float32)

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused top-k compression (threshold-select + pack).
+
+The XLA path for top-k compression is three kernels with HBM round-trips
+between them: ``top_k`` (a full sort on TPU), a gather, and a scatter at
+the receiver.  This kernel produces the packed wire payload — k values
+and k int32 indices in index-ascending order — in ONE VMEM-resident
+pass:
+
+1. *threshold-select*: bisection on the magnitude range finds the
+   largest t with |{i : |x_i| ≥ t}| ≥ k (a fori_loop of d-wide
+   reductions; after ~64 halvings the interval is below fp32 spacing, so
+   the count is exact for distinct magnitudes);
+2. *pack*: selected coordinates are compacted MXU-style — the rank of
+   each selected coordinate is a strict-lower-triangular matvec (no
+   cumsum primitive needed), and a (d, k) one-hot of those ranks gathers
+   values and indices with two matmuls.  Coordinates strictly above the
+   threshold band are always kept; ties at the threshold fill the
+   remaining slots lowest-index-first (``lax.top_k``'s rule).
+
+Like :mod:`repro.kernels.cubic_step` this is a single-tile launch sized
+for the paper's d ≤ a few-k regime: VMEM holds two (d_pad, d_pad)
+iota-comparison tiles, so d_pad² · 4 B must fit in ~16 MB (d ≲ 1.4k).
+
+Validated in interpret mode against :func:`repro.kernels.ref.topk_compress_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(n, mult):
+    return -(-n // mult) * mult
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k, d, n_iter):
+    x = x_ref[...].astype(jnp.float32)                      # (1, dp)
+    dp = x.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, dp), 1)
+    valid = pos < d
+    ax = jnp.where(valid, jnp.abs(x), -1.0)                 # padding never selects
+
+    # -- threshold-select: largest t ≥ 0 with count(|x| ≥ t) ≥ k --------
+    def bisect(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((ax >= mid).astype(jnp.float32))
+        take = cnt >= k
+        return jnp.where(take, mid, lo), jnp.where(take, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(
+        0, n_iter, bisect, (jnp.float32(0.0), jnp.max(ax))
+    )
+    # `sure` (|x| ≥ hi) are strictly inside the top-k band; `tie` sits at
+    # the threshold and only fills the remaining slots, lowest index first
+    # (lax.top_k's rule).  Keeping first-k of the raw ≥lo mask instead
+    # would drop large-magnitude coordinates at high indices on ties.
+    sure = ((ax >= hi) & valid).astype(jnp.float32)         # (1, dp)
+    tie = ((ax >= lo) & valid).astype(jnp.float32) - sure
+
+    # -- pack: ranks via strict-lower-triangular matvecs, gather via one-hot
+    ii = jax.lax.broadcasted_iota(jnp.int32, (dp, dp), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (dp, dp), 1)
+    lt = (ii < jj).astype(jnp.float32)
+
+    def rank_of(sel):                                       # # selected before j
+        return jax.lax.dot_general(
+            sel, lt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    n_sure = jnp.sum(sure)
+    keep = sure * (rank_of(sure) < k).astype(jnp.float32) + tie * (
+        rank_of(tie) < k - n_sure
+    ).astype(jnp.float32)
+    rank = rank_of(keep)
+
+    kp = vals_ref.shape[1]
+    slot = jax.lax.broadcasted_iota(jnp.float32, (dp, kp), 1)
+    sel = (rank.reshape(dp, 1) == slot).astype(jnp.float32) * keep.reshape(dp, 1)
+
+    def gather(row):                                        # (1, dp) @ (dp, kp)
+        return jax.lax.dot_general(
+            row, sel, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    vals_ref[...] = gather(x).astype(vals_ref.dtype)
+    idx_ref[...] = jnp.round(gather(pos.astype(jnp.float32))).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_iter", "interpret"))
+def topk_compress(x, k, *, n_iter=64, interpret=None):
+    """Packed top-|x| payload of a 1-D vector: (values (k,), indices (k,)),
+    index-ascending — the wire format of :class:`repro.compression.TopK`."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d = x.shape[-1]
+    assert x.ndim == 1 and 1 <= k <= d
+    dp, kp = _round_up(d, 128), _round_up(k, 128)
+    xp = jnp.pad(x, (0, dp - d)).reshape(1, dp)
+    kernel = functools.partial(_topk_kernel, k=k, d=d, n_iter=n_iter)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec((1, dp), lambda: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, kp), lambda: (0, 0)),
+            pl.BlockSpec((1, kp), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, kp), jnp.float32),
+            jax.ShapeDtypeStruct((1, kp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp)
+    return vals[0, :k].astype(x.dtype), idx[0, :k]
+
+
+def topk_decompress(vals, idx, d):
+    """Center-side reconstruction: scatter the packed payload to dense."""
+    return jnp.zeros((d,), vals.dtype).at[idx].set(vals)

@@ -129,9 +129,9 @@ class Instr:
         i = self.line.index(self.op + "(") + len(self.op) + 1
         depth, buf, names = 1, "", []
         for ch in self.line[i:]:
-            if ch == "(":
+            if ch in "([{":
                 depth += 1
-            elif ch == ")":
+            elif ch in ")]}":
                 depth -= 1
                 if depth == 0:
                     break
@@ -142,7 +142,16 @@ class Instr:
                 buf += ch
         if buf.strip():
             names.append(buf.strip())
-        return [n.lstrip("%").split(" ")[0].rstrip(",") for n in names if n.strip()]
+        out = []
+        for n in names:
+            if not n.strip():
+                continue
+            # operands print either as "%name" or (newer XLA) as
+            # "f32[32,64]{1,0} %name" — the name is the %-token
+            toks = n.strip().split()
+            tok = next((t for t in toks if t.startswith("%")), toks[-1])
+            out.append(tok.lstrip("%").rstrip(","))
+        return out
 
 
 def parse_hlo(text: str):

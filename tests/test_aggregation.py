@@ -1,9 +1,11 @@
-"""Robust aggregation: norm-trim (the paper's rule) + baselines, with
-hypothesis property tests on the invariants the Byzantine analysis needs."""
+"""Robust aggregation: norm-trim (the paper's rule) + baselines.
+
+The hypothesis property tests on the trimming invariants live in
+test_properties.py behind its importorskip("hypothesis") guard, so this
+module keeps running when hypothesis is absent."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import coordinate_median, norm_trim, norm_trim_tree, trimmed_mean
 
@@ -20,39 +22,6 @@ def test_norm_trim_keep_count():
     for beta, expected in [(0.1, 9), (0.3, 7), (0.5, 5)]:
         _, keep = norm_trim(u, beta)
         assert int(keep.sum()) == expected
-
-
-@settings(max_examples=50, deadline=None)
-@given(
-    st.integers(min_value=4, max_value=12),  # m
-    st.integers(min_value=1, max_value=6),   # d
-    st.integers(min_value=0, max_value=10**6),
-)
-def test_norm_trim_bounded_by_kept_max(m, d, seed):
-    """Post-trim, every surviving row's norm ≤ the (1−β)-quantile norm —
-    the key lemma behind Theorem 2's attack bound."""
-    rng = np.random.default_rng(seed)
-    u = jnp.asarray(rng.normal(size=(m, d)) * rng.exponential(5, size=(m, 1)))
-    beta = 0.25
-    agg, keep = norm_trim(u, beta)
-    n_keep = max(1, int(round((1 - beta) * m)))
-    norms = np.linalg.norm(np.asarray(u), axis=1)
-    thresh = np.sort(norms)[n_keep - 1]
-    kept_norms = norms[np.asarray(keep) > 0]
-    assert (kept_norms <= thresh + 1e-6).all()
-    # aggregate norm bounded by the threshold too (mean of vectors ≤ max norm)
-    assert np.linalg.norm(np.asarray(agg)) <= thresh + 1e-6
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.integers(min_value=0, max_value=10**6))
-def test_norm_trim_permutation_invariant_aggregate(seed):
-    rng = np.random.default_rng(seed)
-    u = jnp.asarray(rng.normal(size=(9, 7)))
-    perm = rng.permutation(9)
-    a1, _ = norm_trim(u, 0.3)
-    a2, _ = norm_trim(u[perm], 0.3)
-    np.testing.assert_allclose(a1, a2, atol=1e-5)
 
 
 def test_norm_trim_tree_matches_flat():

@@ -1,0 +1,242 @@
+"""δ-approximate compression subsystem: contraction guarantees, wire-bit
+accounting, error feedback on the quadratic-with-saddle problem, and
+end-to-end parity/convergence of the compressed mesh train step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compression import (
+    EF21,
+    ErrorFeedback,
+    Identity,
+    TopK,
+    TreeCompressor,
+    index_bits,
+    make_compressor,
+    make_error_feedback,
+)
+from repro.core import DistributedCubicNewton, NewtonConfig
+from repro.core.distributed import (
+    DistributedNewtonConfig,
+    make_train_step,
+    wire_bits_per_step,
+)
+
+SPECS = ["topk:0.1", "topk:0.5", "signnorm", "int8", "int8:32"]
+
+
+# ------------------------- δ-contraction ----------------------------------
+
+
+@pytest.mark.parametrize("spec", SPECS)
+@pytest.mark.parametrize("d", [7, 123, 300])
+def test_delta_contraction(spec, d, rng):
+    """Definition 2: ‖x − C(x)‖² ≤ (1 − δ)‖x‖² at the measured δ, and the
+    measured δ respects the compressor's guaranteed bound."""
+    x = jax.random.normal(rng, (d,)) * jnp.exp(
+        jax.random.normal(jax.random.fold_in(rng, 1), (d,))
+    )
+    comp = make_compressor(spec, d)
+    r = comp.roundtrip(x)
+    sq = float(jnp.sum(x * x))
+    err = float(jnp.sum((x - r) ** 2))
+    delta = float(comp.delta(x))
+    assert err <= (1.0 - delta) * sq + 1e-4 * sq  # measured δ is exact
+    assert delta >= comp.delta_bound(d) - 1e-6    # and above the guarantee
+
+
+def test_randk_delta_in_expectation(rng):
+    d, k = 200, 20
+    comp = make_compressor("randk:0.1", d)
+    x = jax.random.normal(rng, (d,))
+    deltas = jnp.stack(
+        [comp.delta(x, key=jax.random.fold_in(rng, i)) for i in range(300)]
+    )
+    assert abs(float(deltas.mean()) - k / d) < 0.02
+
+
+def test_topk_lossless_at_full_k(rng):
+    x = jax.random.normal(rng, (64,))
+    comp = make_compressor("topk:1.0", 64)
+    assert comp.k == 64
+    assert bool(jnp.all(comp.roundtrip(x) == x))
+
+
+# ------------------------- wire accounting --------------------------------
+
+
+def test_wire_bits_accounting():
+    d = 300
+    assert Identity().wire_bits(d) == 32 * d
+    assert make_compressor("signnorm", d).wire_bits(d) == d + 32
+    topk = make_compressor("topk:0.1", d)
+    assert topk.wire_bits(d) == 30 * (32 + index_bits(d))
+    assert index_bits(d) == 9  # 2^9 = 512 ≥ 300
+    int8 = make_compressor("int8", d)
+    assert int8.wire_bits(d) == d * 8 + 3 * 32  # ⌈300/128⌉ = 3 blocks
+    # every compressor beats full precision
+    for spec in SPECS:
+        assert make_compressor(spec, d).wire_bits(d) < 32 * d
+
+
+def test_newton_run_accumulates_wire_bits(rng):
+    from repro.data import make_classification, shard_to_workers
+    from benchmarks.problems import logistic_loss
+
+    X, y, _ = make_classification(rng, 400, 10)
+    Xm, ym = shard_to_workers(X, y, 4)
+    algo = DistributedCubicNewton(
+        logistic_loss, NewtonConfig(M=10.0, beta=0.0, compressor="topk:0.5")
+    )
+    _, hist = algo.run(jnp.zeros(10), Xm, ym, 3)
+    per_step = algo.wire_bits_per_step(10, 4)
+    assert per_step == 4 * 5 * (32 + index_bits(10))
+    assert hist["wire_bits"] == 3 * per_step
+
+
+# ------------------------- error feedback ---------------------------------
+
+
+def test_feedback_lossless_passthrough(rng):
+    """Both EF schemes are exact when the compressor is lossless."""
+    x = jax.random.normal(rng, (32,))
+    for wrap in (ErrorFeedback, EF21):
+        ef = wrap(TopK(32), damping=0.75)
+        e = ef.init(32)
+        for _ in range(3):
+            xhat, e = ef.apply(x, e)
+            np.testing.assert_allclose(xhat, x, atol=1e-6)
+
+
+def test_make_error_feedback_variants():
+    base = TopK(4)
+    assert make_error_feedback("none", base) is None
+    assert isinstance(make_error_feedback("ef", base), ErrorFeedback)
+    assert isinstance(make_error_feedback("ef21", base), EF21)
+    with pytest.raises(ValueError):
+        make_error_feedback("bogus", base)
+
+
+def test_error_feedback_escapes_saddle():
+    """Compressed cubic Newton still escapes the strict saddle of the
+    low-rank factorization problem (the quadratic-with-saddle workload of
+    benchmarks.saddle_escape) — the EF convergence smoke test."""
+    from benchmarks.saddle_escape import factor_loss, make_problem
+
+    key = jax.random.PRNGKey(0)
+    d, r, m = 10, 2, 10
+    X, _ = make_problem(key, d=d, r=r, m=m)
+    y = jnp.zeros(X.shape[:2])
+    w0 = 1e-3 * jax.random.normal(jax.random.fold_in(key, 2), (d * r,))
+    saddle_val = float(factor_loss(jnp.zeros(d * r), X.reshape(-1, d), None))
+
+    algo = DistributedCubicNewton(
+        factor_loss,
+        NewtonConfig(M=10.0, eta=1.0, beta=0.1, compressor="topk:0.25"),
+    )
+    _, hist = algo.run(w0, X, y, 15)
+    assert hist["loss"][-1] < 0.1 * saddle_val
+    # without any feedback the same budget stalls closer to the saddle
+    algo_nofb = DistributedCubicNewton(
+        factor_loss,
+        NewtonConfig(
+            M=10.0, eta=1.0, beta=0.1, compressor="topk:0.25",
+            error_feedback="none",
+        ),
+    )
+    _, hist_nofb = algo_nofb.run(w0, X, y, 15)
+    assert hist["loss"][-1] < hist_nofb.get("loss")[-1] + 1e-6
+
+
+# ------------------------- tree compressor --------------------------------
+
+
+def test_tree_compressor_shapes_dtypes(rng):
+    tc = TreeCompressor("topk:0.5")
+    tree = {
+        "w": jax.random.normal(rng, (4, 6, 3), jnp.float32),
+        "b": jax.random.normal(jax.random.fold_in(rng, 1), (4, 5), jnp.bfloat16),
+    }
+    out = tc.roundtrip_worker_tree(tree, rng, 4)
+    assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(tree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    # per-worker bits: leaves of size 18 and 5 at ratio 0.5 → k = 9, 2
+    assert tc.wire_bits_tree(tree, 4) == 9 * (32 + index_bits(18)) + 2 * (
+        32 + index_bits(5)
+    )
+    assert 0 < tc.delta_bound_tree(tree, 4) <= 1.0
+
+
+# ------------------------- mesh train step --------------------------------
+
+
+def _quad_setup(rng, m=4, n=32, din=8):
+    wstar = jax.random.normal(rng, (din,))
+    X = jax.random.normal(jax.random.fold_in(rng, 1), (m, n, din))
+    Y = X @ wstar + 0.01 * jax.random.normal(jax.random.fold_in(rng, 2), (m, n))
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    params0 = {"w": jnp.zeros(din), "b": jnp.zeros(())}
+    return loss_fn, params0, {"x": X, "y": Y}
+
+
+def test_train_step_compression_parity_at_full_k(rng):
+    """make_train_step(compressor=topk) at k = d is bit-identical to the
+    uncompressed step — the end-to-end parity contract."""
+    loss_fn, params0, batch = _quad_setup(rng)
+    cfg = DistributedNewtonConfig(M=10.0, beta=0.25, solver_iters=4)
+    plain = jax.jit(make_train_step(loss_fn, cfg, 4))
+    full = jax.jit(make_train_step(loss_fn, cfg, 4, compressor="topk:1.0"))
+    key = jax.random.PRNGKey(3)
+    p1, m1 = plain(params0, batch, key)
+    p2, m2 = full(params0, batch, key)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(m1["update_norms"], m2["update_norms"])
+
+
+def test_train_step_compressed_converges_and_counts_bits(rng):
+    loss_fn, params0, batch = _quad_setup(rng)
+    cfg = DistributedNewtonConfig(
+        M=10.0, beta=0.25, solver_iters=4, compressor="topk:0.5"
+    )
+    step = jax.jit(make_train_step(loss_fn, cfg, 4))
+    params, key = params0, jax.random.PRNGKey(0)
+    losses = []
+    for _ in range(12):
+        key, sub = jax.random.split(key)
+        params, metrics = step(params, batch, sub)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < 0.5 * losses[0]
+    assert all(np.isfinite(losses))
+    # d = 9 (w:8 + b:1) at ratio 0.5 → k = 4 on w, 1 on b
+    expected = 4 * (32 + index_bits(8)) + 1 * (32 + index_bits(1))
+    assert float(metrics["wire_bits_per_worker"]) == expected
+    assert wire_bits_per_step(params0, cfg) == expected  # exact static mirror
+    plain_cfg = DistributedNewtonConfig()
+    uncompressed = jax.jit(make_train_step(loss_fn, plain_cfg, 4))
+    _, mu = uncompressed(params0, batch, jax.random.PRNGKey(0))
+    assert float(mu["wire_bits_per_worker"]) == 32 * 9
+    assert wire_bits_per_step(params0, plain_cfg) == 32 * 9
+    # two_round adds the full-precision gradient round
+    assert (
+        wire_bits_per_step(params0, DistributedNewtonConfig(two_round=True))
+        == 2 * 32 * 9
+    )
+
+
+def test_train_step_compressed_trims_attacker(rng):
+    loss_fn, params0, batch = _quad_setup(rng)
+    cfg = DistributedNewtonConfig(
+        M=10.0, beta=0.25, solver_iters=2, compressor="signnorm"
+    )
+    step = jax.jit(
+        make_train_step(loss_fn, cfg, 4, attack_name="gaussian", attack_alpha=0.25)
+    )
+    _, metrics = step(params0, batch, jax.random.PRNGKey(0))
+    assert float(metrics["kept"][0]) == 0.0  # Byzantine worker 0 trimmed

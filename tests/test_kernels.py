@@ -5,9 +5,21 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import attention_bshd, cubic_step, flash_attention, rmsnorm
+from repro.kernels import (
+    attention_bshd,
+    cubic_step,
+    flash_attention,
+    rmsnorm,
+    topk_compress,
+    topk_decompress,
+)
 from repro.kernels.cubic_step import cubic_solve_fused
-from repro.kernels.ref import cubic_step_ref, flash_attention_ref, rmsnorm_ref
+from repro.kernels.ref import (
+    cubic_step_ref,
+    flash_attention_ref,
+    rmsnorm_ref,
+    topk_compress_ref,
+)
 from repro.core import solve_cubic_exact
 
 
@@ -83,6 +95,62 @@ def test_cubic_solve_fused_matches_exact(rng):
     s = cubic_solve_fused(g, H, n_iters=4000)
     s_ex = solve_cubic_exact(g, H)
     np.testing.assert_allclose(s, s_ex, atol=1e-3)
+
+
+@pytest.mark.parametrize("d", [64, 123, 300, 512])
+@pytest.mark.parametrize("ratio", [0.05, 0.1, 0.5, 1.0])
+def test_topk_compress_sweep(d, ratio, rng):
+    """Fused threshold-select + pack vs the lax.top_k oracle: identical
+    packed payload (index-ascending) on dense random vectors."""
+    k = max(1, int(round(ratio * d)))
+    x = jax.random.normal(jax.random.fold_in(rng, d * 1000 + k), (d,))
+    v, i = topk_compress(x, k)
+    vr, ir = topk_compress_ref(x, k)
+    np.testing.assert_array_equal(i, ir)
+    np.testing.assert_allclose(v, vr, atol=1e-6)
+    np.testing.assert_allclose(
+        topk_decompress(v, i, d), topk_decompress(vr, ir, d), atol=1e-6
+    )
+
+
+def test_topk_compress_edge_cases():
+    # constant and zero vectors: ties keep the lowest indices
+    for x in (jnp.zeros(130), jnp.ones(130)):
+        v, i = topk_compress(x, 5)
+        np.testing.assert_array_equal(i, jnp.arange(5))
+        np.testing.assert_allclose(v, x[:5])
+
+
+def test_topk_compress_ties_keep_large_magnitudes(rng):
+    # threshold ties at low indices must not evict strictly larger values
+    # at high indices (regression: first-k-by-index over the raw mask)
+    x = jnp.array([2.0, 2.0, 2.0, -7.0])
+    v, i = topk_compress(x, 2)
+    vr, ir = topk_compress_ref(x, 2)
+    np.testing.assert_array_equal(i, ir)
+    np.testing.assert_allclose(v, vr)
+    # sparse input, fewer nonzeros than k, nonzero at a high index
+    xs = jnp.zeros(10).at[7].set(5.0)
+    v, i = topk_compress(xs, 3)
+    np.testing.assert_array_equal(i, topk_compress_ref(xs, 3)[1])
+    # heavy-tie sweep: quantized magnitudes, random (d, k)
+    for t in range(25):
+        kk = jax.random.fold_in(rng, t)
+        d = int(jax.random.randint(kk, (), 4, 60))
+        xq = jnp.round(jax.random.normal(jax.random.fold_in(kk, 1), (d,)) * 3) / 3
+        k = int(jax.random.randint(jax.random.fold_in(kk, 2), (), 1, d + 1))
+        v, i = topk_compress(xq, k)
+        vr, ir = topk_compress_ref(xq, k)
+        np.testing.assert_array_equal(i, ir)
+        np.testing.assert_allclose(v, vr, atol=1e-6)
+
+
+def test_topk_compress_vmap(rng):
+    xs = jax.random.normal(rng, (4, 300))
+    vs, idxs = jax.jit(jax.vmap(lambda z: topk_compress(z, 30)))(xs)
+    assert vs.shape == (4, 30) and idxs.shape == (4, 30)
+    ref = jax.vmap(lambda z: topk_compress_ref(z, 30)[0])(xs)
+    np.testing.assert_allclose(vs, ref, atol=1e-6)
 
 
 @pytest.mark.parametrize("N,d", [(128, 256), (256, 512), (64, 1024)])

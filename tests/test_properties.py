@@ -1,10 +1,20 @@
-"""Hypothesis property tests on the system's numerical invariants."""
+"""Hypothesis property tests on the system's numerical invariants.
+
+ALL hypothesis-based tests live in this module (the unit-test modules
+stay hypothesis-free), behind an importorskip so the suite degrades
+gracefully when the dependency is absent.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.compression import make_compressor
 from repro.core import norm_trim, solve_cubic_exact, cubic_model_value
+from repro.core.tree_util import tree_dot, tree_randn_like
 from repro.models.attention import chunked_attention, reference_attention
 from repro.models.mamba2 import ssd_chunked, ssd_reference
 
@@ -81,3 +91,68 @@ def test_norm_trim_scale_equivariant(m, seed):
     a2, k2 = norm_trim(3.5 * u, 0.25)
     np.testing.assert_allclose(3.5 * a1, a2, rtol=1e-5)
     np.testing.assert_array_equal(k1, k2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=12),  # m
+    st.integers(min_value=1, max_value=6),   # d
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_norm_trim_bounded_by_kept_max(m, d, seed):
+    """Post-trim, every surviving row's norm ≤ the (1−β)-quantile norm —
+    the key lemma behind Theorem 2's attack bound."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(m, d)) * rng.exponential(5, size=(m, 1)))
+    beta = 0.25
+    agg, keep = norm_trim(u, beta)
+    n_keep = max(1, int(round((1 - beta) * m)))
+    norms = np.linalg.norm(np.asarray(u), axis=1)
+    thresh = np.sort(norms)[n_keep - 1]
+    kept_norms = norms[np.asarray(keep) > 0]
+    assert (kept_norms <= thresh + 1e-6).all()
+    # aggregate norm bounded by the threshold too (mean of vectors ≤ max norm)
+    assert np.linalg.norm(np.asarray(agg)) <= thresh + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_norm_trim_permutation_invariant_aggregate(seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(9, 7)))
+    perm = rng.permutation(9)
+    a1, _ = norm_trim(u, 0.3)
+    a2, _ = norm_trim(u[perm], 0.3)
+    np.testing.assert_allclose(a1, a2, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_tree_dot_matches_flat(seed):
+    key = jax.random.PRNGKey(seed)
+    t1 = {"a": jax.random.normal(key, (3, 4)), "b": jax.random.normal(key, (5,))}
+    t2 = tree_randn_like(jax.random.fold_in(key, 1), t1)
+    flat1 = jnp.concatenate([t1["a"].ravel(), t1["b"]])
+    flat2 = jnp.concatenate([t2["a"].ravel(), t2["b"]])
+    np.testing.assert_allclose(tree_dot(t1, t2), flat1 @ flat2, rtol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.sampled_from(["topk:0.1", "topk:0.5", "signnorm", "int8", "int8:32"]),
+    st.integers(min_value=2, max_value=400),   # d
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_compressor_delta_contraction(spec, d, seed):
+    """Definition 2: ‖x − C(x)‖² ≤ (1 − δ)‖x‖² with the compressor's
+    guaranteed δ, on arbitrary inputs (the deterministic compressors)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.normal(size=(d,)) * rng.exponential(3, size=(d,)), jnp.float32
+    )
+    comp = make_compressor(spec, d)
+    r = comp.roundtrip(x)
+    err = float(jnp.sum((x - r) ** 2))
+    sq = float(jnp.sum(x * x))
+    assert err <= (1.0 - comp.delta_bound(d)) * sq + 1e-5 * max(sq, 1.0)
+    assert float(comp.delta(x)) >= comp.delta_bound(d) - 1e-5

@@ -1,19 +1,20 @@
-"""Data pipeline, optimizers, checkpointing, tree utils, HLO analyzer."""
+"""Data pipeline, optimizers, checkpointing, tree utils, HLO analyzer.
+
+The hypothesis property test on tree_dot lives in test_properties.py
+behind its importorskip("hypothesis") guard, so this module keeps
+running when hypothesis is absent."""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config
 from repro.core.tree_util import (
     tree_axpy,
-    tree_dot,
     tree_norm,
-    tree_randn_like,
     tree_size,
     tree_zeros_like,
 )
@@ -99,17 +100,6 @@ def test_checkpoint_roundtrip(tmp_path):
 
 
 # ------------------------------ tree utils ---------------------------------
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(min_value=0, max_value=10**6))
-def test_tree_dot_matches_flat(seed):
-    key = jax.random.PRNGKey(seed)
-    t1 = {"a": jax.random.normal(key, (3, 4)), "b": jax.random.normal(key, (5,))}
-    t2 = tree_randn_like(jax.random.fold_in(key, 1), t1)
-    flat1 = jnp.concatenate([t1["a"].ravel(), t1["b"]])
-    flat2 = jnp.concatenate([t2["a"].ravel(), t2["b"]])
-    np.testing.assert_allclose(tree_dot(t1, t2), flat1 @ flat2, rtol=1e-5)
 
 
 def test_tree_axpy_size_zeros():
