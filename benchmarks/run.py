@@ -2,10 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of one
 algorithm round / kernel call on this host; derived = the headline derived
-metric for that artifact: final accuracy, loss, round-speedup, or dominant
-roofline term).  Full-protocol runs: pass --full.
+metric for that artifact: final accuracy, loss, round-speedup, exact wire
+bits, or dominant roofline term).  Full-protocol runs: pass --full; CI
+smoke: ``--dryrun`` (seconds-scale budgets, every entry still executed).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--skip-roofline]
+    PYTHONPATH=src python -m benchmarks.run [--full|--dryrun] [--skip-roofline]
 """
 from __future__ import annotations
 
@@ -22,6 +23,9 @@ def _emit(name, us, derived):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale rounds")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="seconds-scale smoke: tiny budgets, exercises every "
+                         "benchmark entry (CI runs this so they can't rot)")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--out", default="results/benchmarks.json")
     args = ap.parse_args(argv)
@@ -34,8 +38,10 @@ def main(argv=None) -> None:
         roofline,
     )
 
-    T = 15 if args.full else 6
+    T = 15 if args.full else (2 if args.dryrun else 6)
     datasets = ("a9a", "w8a") if args.full else ("a9a",)
+    if args.dryrun:
+        args.skip_roofline = True
     all_results = {}
     print("name,us_per_call,derived")
 
@@ -55,7 +61,8 @@ def main(argv=None) -> None:
     r12 = fig12_byzantine.run(
         T=T, datasets=datasets,
         attacks=("flipped_label", "negative", "gaussian", "random_label")
-        if args.full else ("flipped_label", "gaussian"),
+        if args.full else (("gaussian",) if args.dryrun
+                           else ("flipped_label", "gaussian")),
         alphas=(0.10, 0.15, 0.20) if args.full else (0.20,),
     )
     n_rounds = sum(len(v.get("loss", v.get("accuracy", []))) for v in r12.values())
@@ -68,10 +75,12 @@ def main(argv=None) -> None:
     # ---- Table 1: communication rounds vs ByzantinePGD --------------------
     t0 = time.time()
     t1 = table1_communication.run(
+        dataset="a9a" if args.dryrun else "w8a",
         attacks=("gaussian", "flipped_label", "negative", "random_label")
         if args.full else ("gaussian",),
         alphas=(0.10, 0.15, 0.20) if args.full else (0.15,),
-        max_rounds=400 if args.full else 250,
+        max_rounds=400 if args.full else (40 if args.dryrun else 250),
+        newton_budget=60 if not args.dryrun else 4,
     )
     dt = time.time() - t0
     for row in t1:
@@ -79,30 +88,55 @@ def main(argv=None) -> None:
             f"table1/{row['attack']}/alpha={row['alpha']:g}",
             dt / max(len(t1), 1) * 1e6 / 100,
             f"newton={row['newton_rounds']}r pgd={row['pgd_rounds']}r "
-            f"speedup={row['speedup']:.1f}x",
+            f"speedup={row['speedup']:.1f}x "
+            f"up_bits={row['newton_uplink_bits']} "
+            f"down_bits={row['newton_downlink_bits']}",
         )
     all_results["table1"] = t1
 
-    # ---- Table 1 (compression axis): bits on the wire ---------------------
+    # ---- Table 1 (compression axis): exact bits on the wire ---------------
     t0 = time.time()
     tc = table1_communication.run_compression(
         dataset="w8a" if args.full else "a9a",
+        newton_budget=60 if not args.dryrun else 4,
     )
     dt = time.time() - t0
     for row in tc:
         _emit(
             f"table1_compression/{row['compressor']}",
             dt / max(len(tc), 1) * 1e6 / 100,
-            f"rounds={row['rounds']} bits/round={row['bits_per_round']} "
-            f"total_bits={row['wire_bits_total']} "
+            f"rounds={row['rounds']} "
+            f"up/round={row['uplink_bits_per_round']} "
+            f"down/round={row['downlink_bits_per_round']} "
+            f"up_total={row['uplink_bits']} down_total={row['downlink_bits']} "
             f"overhead={row['round_overhead']:.2f}x "
             f"bits_saving={row['bits_saving']:.1f}x",
         )
     all_results["table1_compression"] = tc
 
+    # ---- bits-to-ε curve (total wire, uplink+downlink) --------------------
+    t0 = time.time()
+    te = table1_communication.run_bits_to_eps(
+        dataset="w8a" if args.full else "a9a",
+        newton_budget=25 if not args.dryrun else 4,
+        eps_grid=(0.3, 0.1, 0.05, 0.02) if not args.dryrun else (0.3,),
+    )
+    dt = time.time() - t0
+    for row in te:
+        eps_str = " ".join(
+            f"eps{eps:g}={bits if bits is not None else 'miss'}"
+            for eps, bits in row["bits_to_eps"].items()
+        )
+        _emit(
+            f"bits_to_eps/{row['compressor']}",
+            dt / max(len(te), 1) * 1e6 / 100,
+            eps_str,
+        )
+    all_results["bits_to_eps"] = te
+
     # ---- Saddle escape (beyond-paper; Theorems 1-2 exercised directly) ----
     t0 = time.time()
-    se = saddle_escape.run(T=15 if not args.full else 25)
+    se = saddle_escape.run(T=25 if args.full else (5 if args.dryrun else 15))
     dt = (time.time() - t0) * 1e6 / 45
     sv = se["newton"]["saddle_value"]
     _emit("saddle/newton", dt, f"final={se['newton']['loss'][-1]:.4f} "

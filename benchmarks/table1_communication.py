@@ -1,24 +1,26 @@
 """Table 1 + §6 comparison — communication cost to the gradient stopping
-criterion, in ROUNDS *and* BITS ON THE WIRE.
+criterion, in ROUNDS *and* EXACT BITS ON THE WIRE (uplink + downlink).
 
 Rounds: our cubic Newton vs ByzantinePGD [YCKB19] (R=10, r=5, Q=10,
 T_th=10, coordinate-wise trimmed mean — their settings).  Paper numbers:
 ByzantinePGD ≈ 198–212 rounds, ours ≈ 2–16 (w8a robust regression);
 non-Byzantine §6: 257 vs 7 ⇒ the 36× claim.
 
-Bits: every row also reports exact uplink wire cost (m workers × payload
-bits × rounds; see repro.compression's per-compressor accounting), and
-:func:`run_compression` sweeps δ-approximate compressors (none / top-k /
-sign+norm / int8) on the same stopping criterion — the paper's
-rounds-vs-accuracy story gains a compression-ratio axis: top-k at
-k/d = 0.1 pays ~7.8× fewer bits per round on w8a (1230 vs 9600) and
-must stay within 2× the uncompressed round count.
+Bits: every transmission routes through :mod:`repro.comm` channels, so
+each row reports the run's exact integer :class:`~repro.comm.WireLedger`
+totals per direction (m uplink payloads + one broadcast per round — no
+lossy float metric anywhere).  :func:`run_compression` sweeps
+δ-approximate compressors on the same stopping criterion (top-k at
+k/d = 0.1 pays ~7.8× fewer uplink bits per round on w8a and must stay
+within 2× the uncompressed round count), optionally compressing the
+downlink broadcast too; :func:`run_bits_to_eps` turns the same runs into
+a total-bits(up+down)-to-ε curve — the budget question "how many bits
+until ‖∇f‖ ≤ ε?" the rounds-only Table 1 cannot answer.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.compression import make_compressor
 from repro.configs import PAPER_WORKLOADS
 from repro.core import (
     AttackConfig,
@@ -71,17 +73,25 @@ def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
             max_rounds=max_rounds, grad_tol=grad_tol,
         )
         # PGD ships one full-precision d-gradient per worker per round
-        pgd_bits = h_p["rounds"] * m * 32 * d
+        # (uplink) and the iterate broadcast back (downlink)
+        pgd_up = h_p["rounds"] * m * 32 * d
+        pgd_down = h_p["rounds"] * 32 * d
         return {
             "attack": attack,
             "alpha": alpha,
             "newton_rounds": h_n["rounds"],
             "pgd_rounds": h_p["rounds"],
             "speedup": h_p["rounds"] / max(h_n["rounds"], 1),
-            "newton_wire_bits": h_n["wire_bits"],
-            "newton_bits_per_round": h_n["wire_bits"] // max(h_n["rounds"], 1),
-            "pgd_wire_bits": pgd_bits,
-            "bits_speedup": pgd_bits / max(h_n["wire_bits"], 1),
+            # exact ints from the run's WireLedger
+            "newton_uplink_bits": h_n["uplink_bits"],
+            "newton_downlink_bits": h_n["downlink_bits"],
+            "newton_total_bits": h_n["total_bits"],
+            "newton_bits_per_round": (
+                h_n["total_bits"] // max(h_n["rounds"], 1)
+            ),
+            "pgd_uplink_bits": pgd_up,
+            "pgd_downlink_bits": pgd_down,
+            "bits_speedup": pgd_up / max(h_n["uplink_bits"], 1),
         }
 
     # non-Byzantine headline comparison (the 36× claim)
@@ -94,13 +104,16 @@ def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
 
 def run_compression(dataset="w8a", compressors=COMPRESSOR_SWEEP,
                     attack="none", alpha=0.0, grad_tol=0.02,
-                    newton_budget=60, seed=0):
-    """Rounds AND bits to the gradient stopping criterion, per compressor.
+                    newton_budget=60, seed=0, downlink=None):
+    """Rounds AND exact bits to the gradient stopping criterion, per
+    compressor.
 
     Same workload/criterion as :func:`run`'s Newton arm; each row reports
-    the compressor's per-round uplink cost (m × payload bits), the total
-    rounds×bits spend, and the round overhead vs the uncompressed run —
-    the acceptance bar is topk:0.1 within 2× of none on w8a-robust.
+    the channels' per-round uplink/downlink cost and the run's exact
+    ledger totals.  ``downlink`` optionally compresses the broadcast too
+    (e.g. ``"topk:0.1"``).  The acceptance bar is topk:0.1 within 2× of
+    the uncompressed round count on w8a-robust at ≥4.7× fewer uplink
+    bits.
     """
     wl = PAPER_WORKLOADS[f"{dataset}-robust"]
     data = paper_dataset(wl, seed)
@@ -111,24 +124,28 @@ def run_compression(dataset="w8a", compressors=COMPRESSOR_SWEEP,
     for spec in compressors:
         newton = DistributedCubicNewton(
             robust_regression_loss,
-            NewtonConfig(M=10.0, eta=1.0, beta=beta, compressor=spec),
+            NewtonConfig(M=10.0, eta=1.0, beta=beta, compressor=spec,
+                         downlink_compressor=downlink),
             AttackConfig(name=attack, alpha=alpha),
         )
         _, h = newton.run(
             w0, data["X_workers"], data["y_workers"], newton_budget,
             grad_tol=grad_tol,
         )
-        comp = make_compressor(spec, d)
+        bps = newton.bits_per_step()
+        comp = newton.uplink.compressor
         rows.append({
             "compressor": _spec_name(spec),
+            "downlink": _spec_name(downlink),
             "rounds": h["rounds"],
             "reached_tol": h["grad_norm"][-1] <= grad_tol,
             "grad_norm": h["grad_norm"][-1],
-            "bits_per_round": newton.wire_bits_per_step(d, m),
-            "payload_bits_per_worker": (
-                comp.wire_bits(d) if comp is not None else 32 * d
-            ),
-            "wire_bits_total": h["wire_bits"],
+            "uplink_bits_per_round": bps["uplink"],
+            "downlink_bits_per_round": bps["downlink"],
+            "payload_bits_per_worker": bps["uplink"] // m,
+            "uplink_bits": h["uplink_bits"],
+            "downlink_bits": h["downlink_bits"],
+            "total_bits": h["total_bits"],
             "delta_bound": (
                 comp.delta_bound(d) if comp is not None else 1.0
             ),
@@ -140,7 +157,53 @@ def run_compression(dataset="w8a", compressors=COMPRESSOR_SWEEP,
             r["rounds"] / max(base["rounds"], 1) if base else None
         )
         r["bits_saving"] = (
-            base["wire_bits_total"] / max(r["wire_bits_total"], 1)
+            base["uplink_bits"] / max(r["uplink_bits"], 1)
             if base else None
         )
+        r["total_bits_saving"] = (
+            base["total_bits"] / max(r["total_bits"], 1)
+            if base else None
+        )
+    return rows
+
+
+def run_bits_to_eps(dataset="a9a", compressors=COMPRESSOR_SWEEP,
+                    eps_grid=(0.3, 0.1, 0.05, 0.02), newton_budget=60,
+                    seed=0, downlink=None):
+    """Total-bits-to-ε curves: cumulative exact wire bits (uplink +
+    downlink) spent when ‖∇f‖ first drops below each ε.
+
+    Returns one row per compressor with the full (bits, grad_norm)
+    trajectory plus the bits-at-ε table (None where the budget never
+    reached ε) — the x axis is the per-step ``bits_cumulative`` ledger
+    series, so adaptive-k runs report their true varying per-step cost.
+    """
+    wl = PAPER_WORKLOADS[f"{dataset}-robust"]
+    data = paper_dataset(wl, seed)
+    w0 = jnp.zeros(wl.dim)
+    rows = []
+    for spec in compressors:
+        newton = DistributedCubicNewton(
+            robust_regression_loss,
+            NewtonConfig(M=10.0, eta=1.0, beta=0.1, compressor=spec,
+                         downlink_compressor=downlink),
+        )
+        _, h = newton.run(
+            w0, data["X_workers"], data["y_workers"], newton_budget,
+        )
+        bits_at_eps = {}
+        for eps in eps_grid:
+            hit = next(
+                (b for b, gn in zip(h["bits_cumulative"], h["grad_norm"])
+                 if gn <= eps),
+                None,
+            )
+            bits_at_eps[eps] = hit
+        rows.append({
+            "compressor": _spec_name(spec),
+            "downlink": _spec_name(downlink),
+            "bits_cumulative": h["bits_cumulative"],
+            "grad_norm": h["grad_norm"],
+            "bits_to_eps": bits_at_eps,
+        })
     return rows

@@ -1,45 +1,89 @@
-"""Compressed worker→center communication: the paper's third pillar.
+"""Compressed worker↔center communication: the paper's third pillar.
 
-Runs the same Byzantine logistic-regression workload as quickstart.py
-under every δ-approximate compressor in the registry and prints the
-wire-cost / rounds trade-off — top-k at k/d = 0.1 ships ~8× fewer
-uplink bits per round and (with EF21 error feedback, the default) stays
-within ~2× of the uncompressed round count.
+Runs the paper's w8a robust-regression workload under every δ-approximate
+compressor in the registry and prints the exact-integer wire-cost /
+rounds trade-off from the run's :class:`repro.comm.WireLedger` — top-k
+at k/d = 0.1 ships ~7.8× fewer uplink bits per round and (with EF21
+error feedback, the default) stays within ~2× of the uncompressed round
+count.
 
-    PYTHONPATH=src python examples/compressed_newton.py
+Flags demonstrate the full channel layer on total wire (up + down):
+
+    --downlink [SPEC]   compress the center→worker broadcast too
+                        (default spec topk:0.1 when no value given)
+    --adaptive-k        use the adaptive_topk schedule for the uplink
+                        (k grows on gradient-norm plateaus, shrinks when
+                        progress is cheap)
+
+    PYTHONPATH=src python examples/compressed_newton.py --downlink --adaptive-k
 """
-import jax
+import argparse
+
 import jax.numpy as jnp
 
+from repro.configs import PAPER_WORKLOADS
 from repro.core import AttackConfig, DistributedCubicNewton, NewtonConfig
-from repro.data import make_classification, shard_to_workers
+from repro.data import paper_dataset
 
 
-def logistic_loss(w, X, y):
-    z = X @ w
-    yy = 2.0 * y - 1.0
-    return jnp.mean(jnp.log1p(jnp.exp(-yy * z))) + 1e-3 * w @ w
+def robust_regression_loss(w, X, y):
+    r = y - X @ w
+    return jnp.mean(jnp.log(r * r / 2.0 + 1.0))
 
 
-def main():
-    m, alpha, d = 20, 0.2, 60
-    X, y, _ = make_classification(jax.random.PRNGKey(0), 8000, d, margin=3.0)
-    Xw, yw = shard_to_workers(X, y, m)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="w8a", choices=["a9a", "w8a"])
+    ap.add_argument("--downlink", nargs="?", const="topk:0.1", default=None,
+                    help="compress the broadcast too (optional spec)")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="adaptive_topk:0.05:0.5 uplink schedule")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--grad-tol", type=float, default=0.02)
+    ap.add_argument("--alpha", type=float, default=0.15,
+                    help="Byzantine fraction (gaussian attack)")
+    args = ap.parse_args(argv)
 
-    print(f"{'compressor':>10s} {'bits/round':>10s} {'rounds':>6s} "
-          f"{'grad_norm':>9s} {'acc':>6s}")
-    for spec in (None, "topk:0.1", "randk:0.1", "signnorm", "int8"):
+    wl = PAPER_WORKLOADS[f"{args.dataset}-robust"]
+    data = paper_dataset(wl, seed=0)
+    m, d = wl.m_workers, wl.dim
+    w0 = jnp.zeros(d)
+    beta = args.alpha + 2.0 / m if args.alpha > 0 else 0.1
+    attack = AttackConfig(name="gaussian" if args.alpha > 0 else "none",
+                          alpha=args.alpha)
+
+    specs = [None, "topk:0.1", "randk:0.1", "signnorm", "int8"]
+    if args.adaptive_k:
+        specs.append("adaptive_topk:0.05:0.5")
+
+    print(f"# {wl.name}: m={m} d={d} downlink={args.downlink or 'fp32'} "
+          f"attack=gaussian@{args.alpha}")
+    print(f"{'uplink':>22s} {'rounds':>6s} {'up_bits':>12s} {'down_bits':>10s} "
+          f"{'total_bits':>12s} {'saving':>7s} {'grad_norm':>9s}")
+    base_total = None
+    for spec in specs:
+        # the baseline row stays fully uncompressed (fp32 broadcast), so
+        # the saving column shows the DOWNLINK's contribution too
+        downlink = args.downlink if spec is not None else None
         algo = DistributedCubicNewton(
-            logistic_loss,
-            NewtonConfig(M=10.0, eta=1.0, beta=alpha + 2.0 / m,
-                         compressor=spec),
-            AttackConfig(name="gaussian", alpha=alpha, sigma=50.0),
+            robust_regression_loss,
+            NewtonConfig(M=wl.M, eta=wl.eta, beta=beta, compressor=spec,
+                         downlink_compressor=downlink),
+            attack,
         )
-        w, hist = algo.run(jnp.zeros(d), Xw, yw, n_steps=40, grad_tol=0.05)
-        acc = float(((X @ w > 0) == (y > 0.5)).mean())
-        print(f"{str(spec or 'none'):>10s} "
-              f"{algo.wire_bits_per_step(d, m):>10d} {hist['rounds']:>6d} "
-              f"{hist['grad_norm'][-1]:>9.4f} {acc:>6.3f}")
+        _, hist = algo.run(
+            w0, data["X_workers"], data["y_workers"], n_steps=args.steps,
+            grad_tol=args.grad_tol,
+        )
+        if base_total is None:
+            base_total = hist["total_bits"]
+        saving = base_total / max(hist["total_bits"], 1)
+        name = spec or "none"
+        if args.adaptive_k and spec and spec.startswith("adaptive"):
+            name += f"(k→{algo.uplink.compressor.k})"
+        print(f"{name:>22s} {hist['rounds']:>6d} {hist['uplink_bits']:>12d} "
+              f"{hist['downlink_bits']:>10d} {hist['total_bits']:>12d} "
+              f"{saving:>6.1f}x {hist['grad_norm'][-1]:>9.4f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Comm — the unified worker↔center communication layer.
+
+Every transmission in both runtimes routes through a
+:class:`~repro.comm.channel.Channel`: compressor (resolved once),
+per-sender EF/EF21 state as an explicit pytree, the Byzantine-injection
+hook, and exact integer wire accounting via
+:class:`~repro.comm.ledger.WireLedger`.
+
+* :mod:`repro.comm.channel` — :class:`VectorChannel` (flat ``(m, d)``
+  senders, the paper-faithful runtime) and :class:`TreeChannel`
+  (worker-stacked / parameter pytrees, the mesh runtime).
+* :mod:`repro.comm.ledger` — host-side exact-int uplink/downlink totals.
+
+See ``src/repro/comm/README.md`` for the channel diagram.
+"""
+from .channel import DOWNLINK, UPLINK, Channel, TreeChannel, VectorChannel
+from .ledger import WireLedger
+
+__all__ = [
+    "Channel",
+    "DOWNLINK",
+    "TreeChannel",
+    "UPLINK",
+    "VectorChannel",
+    "WireLedger",
+]

@@ -1,0 +1,250 @@
+"""The unified communication-channel layer (worker↔center wire).
+
+Every transmission in both runtimes — the worker→center update uplink,
+the Remark-5 gradient round, and the center→worker broadcast downlink —
+goes through a :class:`Channel`.  A channel owns, in one place, what the
+seed code hand-rolled twice with diverging semantics:
+
+* **direction** — ``"uplink"`` (m senders → center) or ``"downlink"``
+  (center → workers, broadcast);
+* **compressor** — a :mod:`repro.compression` spec, resolved ONCE at
+  construction (never per trace);
+* **error-feedback state** — per-sender EF / EF21 memory as an explicit
+  pytree threaded through ``transmit`` (state in, state out), so it
+  jits, vmaps, donates, and takes sharding constraints like any other
+  carry;
+* **Byzantine-injection hook** — update-level attacks corrupt the
+  *reconstructed* payloads (Byzantine workers send arbitrary bytes, so
+  compression grants them no protection);
+* **exact wire accounting** — ``bits_per_round`` is a static Python int
+  the driver feeds a :class:`repro.comm.WireLedger`.
+
+Two layouts mirror the two runtimes:
+
+* :class:`VectorChannel` — senders hold flat ``(d,)`` vectors, stacked
+  ``(n_senders, d)`` (the paper-faithful LIBSVM runtime,
+  :mod:`repro.core.newton`);
+* :class:`TreeChannel`  — senders hold parameter pytrees; uplink leaves
+  carry a leading worker axis of size m, downlink leaves are the param
+  shapes (the mesh runtime, :mod:`repro.core.distributed`).  An optional
+  ``constrain`` callable re-applies GSPMD sharding constraints to the
+  reconstructed tree *and* the feedback state.
+
+``transmit`` is pure and jit-safe; channels hold no traced state.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..compression import TreeCompressor, make_compressor, make_error_feedback
+
+UPLINK = "uplink"
+DOWNLINK = "downlink"
+
+
+def _tree_size(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+class Channel:
+    """Shared direction/feedback bookkeeping for both layouts."""
+
+    def __init__(self, direction: str, n_senders: int, *,
+                 error_feedback: str = "none", damping: float = 1.0,
+                 attack_hook: Optional[Callable] = None):
+        if direction not in (UPLINK, DOWNLINK):
+            raise ValueError(f"direction must be uplink/downlink, got {direction!r}")
+        self.direction = direction
+        self.n_senders = int(n_senders)
+        self.error_feedback = error_feedback
+        self.damping = damping
+        self.attack_hook = attack_hook
+
+    @property
+    def is_uplink(self) -> bool:
+        return self.direction == UPLINK
+
+    def _ledger_kwargs(self, bits: int) -> dict:
+        return {"uplink" if self.is_uplink else "downlink": bits}
+
+
+class VectorChannel(Channel):
+    """Flat-vector senders: ``x`` is ``(n_senders, d)`` (or ``(d,)`` when
+    ``n_senders == 1``) — the :class:`DistributedCubicNewton` layout.
+
+    ``spec`` is resolved against ``d`` once, here; ``None`` means a
+    full-precision wire (identity passthrough, 32 bits/coordinate).
+    """
+
+    def __init__(self, direction: str, spec, d: int, n_senders: int = 1, *,
+                 error_feedback: str = "none", damping: float = 1.0,
+                 attack_hook: Optional[Callable] = None,
+                 value_bits: int = 32):
+        super().__init__(direction, n_senders, error_feedback=error_feedback,
+                         damping=damping, attack_hook=attack_hook)
+        self.d = int(d)
+        self.value_bits = value_bits
+        self.compressor = make_compressor(spec, d)
+        self.feedback = (
+            make_error_feedback(error_feedback, self.compressor, damping)
+            if self.compressor is not None else None
+        )
+
+    # -- state ----------------------------------------------------------
+    def init_state(self):
+        """Fresh per-sender EF memory; a zero-width array when the channel
+        carries no feedback (keeps the carry pytree structure stable)."""
+        width = self.d if self.feedback is not None else 0
+        shape = (self.n_senders, width) if self.n_senders > 1 else (width,)
+        return jnp.zeros(shape, jnp.float32)
+
+    # -- the wire -------------------------------------------------------
+    def transmit(self, x, state, *, key=None, attack_key=None):
+        """One round: compress/EF every sender's vector, reconstruct at
+        the receiver, inject Byzantine payloads.  Returns ``(x̂, state')``.
+        """
+        comp, fb = self.compressor, self.feedback
+        if comp is not None:
+            if self.n_senders > 1:
+                keys = (jax.random.split(key, self.n_senders)
+                        if key is not None else None)
+                if fb is not None:
+                    x, state = jax.vmap(
+                        lambda xi, ei, ki: fb.apply(xi, ei, key=ki)
+                    )(x, state, keys)
+                else:
+                    x = jax.vmap(lambda xi, ki: comp.roundtrip(xi, key=ki))(
+                        x, keys
+                    )
+            else:
+                if fb is not None:
+                    x, state = fb.apply(x, state, key=key)
+                else:
+                    x = comp.roundtrip(x, key=key)
+        if self.attack_hook is not None and attack_key is not None:
+            x = self.attack_hook(attack_key, x)
+        return x, state
+
+    # -- accounting -----------------------------------------------------
+    def bits_per_round(self) -> int:
+        """Exact bits one round costs on this channel (static Python int):
+        m payloads uplink, ONE broadcast payload downlink."""
+        payload = (self.compressor.wire_bits(self.d)
+                   if self.compressor is not None
+                   else self.value_bits * self.d)
+        return payload * (self.n_senders if self.is_uplink else 1)
+
+    def record(self, ledger, rounds: int = 1) -> None:
+        ledger.record(rounds=rounds,
+                      **self._ledger_kwargs(self.bits_per_round() * rounds))
+
+
+class TreeChannel(Channel):
+    """Pytree senders — the mesh runtime layout.
+
+    Uplink trees are worker-stacked (every leaf ``(m, …)``); downlink
+    trees are parameter-shaped.  The per-leaf compressor comes from a
+    :class:`repro.compression.TreeCompressor` (static k per leaf), and
+    ``constrain`` re-applies the caller's sharding constraints to the
+    reconstructed tree and the EF state so GSPMD sees the same layout as
+    the uncompressed step.
+    """
+
+    def __init__(self, direction: str, spec, n_senders: int = 1, *,
+                 error_feedback: str = "none", damping: float = 1.0,
+                 attack_hook: Optional[Callable] = None,
+                 constrain: Optional[Callable] = None,
+                 value_bits: int = 32):
+        super().__init__(direction, n_senders, error_feedback=error_feedback,
+                         damping=damping, attack_hook=attack_hook)
+        self.value_bits = value_bits
+        if spec is None or isinstance(spec, TreeCompressor):
+            self.tree_compressor = spec
+        else:
+            self.tree_compressor = TreeCompressor(spec)
+        self.constrain = constrain or (lambda t: t)
+        self._ef_cache: dict[int, object] = {}
+        self.stateful = (self.tree_compressor is not None
+                         and error_feedback not in (None, False, "none"))
+
+    def _ef(self, d: int):
+        if d not in self._ef_cache:
+            self._ef_cache[d] = make_error_feedback(
+                self.error_feedback,
+                self.tree_compressor.leaf_compressor(d),
+                self.damping,
+            )
+        return self._ef_cache[d]
+
+    # -- state ----------------------------------------------------------
+    def init_state(self, params):
+        """Per-sender EF memory mirroring the transmitted tree (float32;
+        uplink leaves gain the leading worker axis).  ``()`` when the
+        channel is stateless — stable carry structure either way."""
+        if not self.stateful:
+            return ()
+        lead = (self.n_senders,) if self.n_senders > 1 else ()
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(lead + p.shape, jnp.float32), params
+        )
+
+    # -- the wire -------------------------------------------------------
+    def transmit(self, tree, state, *, key=None, attack_key=None):
+        tc = self.tree_compressor
+        if tc is not None:
+            # a stateful channel's init_state is never empty, so the None
+            # check alone distinguishes the stateless wrapper's carry
+            if self.stateful and state is not None:
+                tree, state = self._feedback_roundtrip(tree, state, key)
+                state = self.constrain(state)
+            elif self.n_senders > 1:
+                tree = tc.roundtrip_worker_tree(tree, key, self.n_senders)
+            else:
+                tree = tc.roundtrip_tree(tree, key)
+            tree = self.constrain(tree)
+        if self.attack_hook is not None and attack_key is not None:
+            tree = self.constrain(self.attack_hook(attack_key, tree))
+        return tree, state
+
+    def _feedback_roundtrip(self, tree, state, key):
+        """EF/EF21 per leaf per sender; state leaves keep the transmitted
+        leaf shapes (so one sharding constraint covers both)."""
+        n = self.n_senders
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        st_leaves = jax.tree_util.tree_leaves(state)
+        assert len(st_leaves) == len(leaves), "feedback state/tree mismatch"
+        keys = jax.random.split(key, n) if (key is not None and n > 1) else None
+        out, new_st = [], []
+        for i, (x, e) in enumerate(zip(leaves, st_leaves)):
+            d = x.size // n
+            ef = self._ef(d)
+            if n > 1:
+                leaf_keys = (jax.vmap(lambda kk: jax.random.fold_in(kk, i))(keys)
+                             if keys is not None else None)
+                xhat, e_new = jax.vmap(
+                    lambda xi, ei, ki: ef.apply(xi, ei, key=ki)
+                )(x.reshape(n, d), e.reshape(n, d), leaf_keys)
+            else:
+                ki = jax.random.fold_in(key, i) if key is not None else None
+                xhat, e_new = ef.apply(x.reshape(d), e.reshape(d), key=ki)
+            out.append(xhat.reshape(x.shape).astype(x.dtype))
+            new_st.append(e_new.reshape(e.shape).astype(jnp.float32))
+        return (jax.tree_util.tree_unflatten(treedef, out),
+                jax.tree_util.tree_unflatten(
+                    jax.tree_util.tree_structure(state), new_st))
+
+    # -- accounting -----------------------------------------------------
+    def bits_per_round(self, params) -> int:
+        """Exact bits one round costs, given the (unstacked) param tree."""
+        if self.tree_compressor is not None:
+            payload = self.tree_compressor.wire_bits_tree(params, 1)
+        else:
+            payload = self.value_bits * _tree_size(params)
+        return payload * (self.n_senders if self.is_uplink else 1)
+
+    def record(self, ledger, params, rounds: int = 1) -> None:
+        ledger.record(rounds=rounds,
+                      **self._ledger_kwargs(self.bits_per_round(params) * rounds))

@@ -11,9 +11,12 @@ third pillar; COMRADE's compressed second-order updates).
   biased compressors retain convergence.
 * :mod:`repro.compression.tree` — pytree-aware per-leaf compression for
   the mesh runtime (static shapes per leaf, worker-stacked vmap layout).
+* :mod:`repro.compression.adaptive` — adaptive top-k (host-side k
+  schedule driven by the gradient-norm plateau / measured δ).
 * :mod:`repro.compression.registry` — spec strings ("topk:0.1", …) →
   compressors, the form configs carry.
 """
+from .adaptive import AdaptiveTopK
 from .base import Compressor, Identity, index_bits
 from .error_feedback import EF21, ErrorFeedback, make_error_feedback
 from .quant import BlockInt8
@@ -23,6 +26,7 @@ from .sparsify import RandomK, TopK
 from .tree import TreeCompressor
 
 __all__ = [
+    "AdaptiveTopK",
     "BlockInt8",
     "COMPRESSORS",
     "Compressor",

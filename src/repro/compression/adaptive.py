@@ -1,0 +1,76 @@
+"""Adaptive top-k: spend bits only when the iterate needs them.
+
+:class:`AdaptiveTopK` is a top-k compressor whose k follows a *host-side*
+schedule between steps.  Under jit every shape must be static, so k is a
+plain Python int; the schedule mutates it between executions and the
+owning runtime re-traces its step (a handful of retraces over a run —
+see ``DistributedCubicNewton.run``).
+
+Policy (the ROADMAP's "grow/shrink with the measured δ or the
+gradient-norm plateau"):
+
+* **plateau ⇒ grow** — if the gradient norm improved by less than
+  ``plateau_tol`` (relative) over the last ``patience`` steps, the
+  compression error is what is stalling progress (near saddles the true
+  update is small and top-k truncation dominates): double k toward
+  ``k_max``.
+* **fast progress ⇒ shrink** — if the iterate is moving well (relative
+  improvement above ``shrink_tol`` over the window) *and* the measured δ
+  comfortably exceeds the k_min guarantee, halve k back toward
+  ``k_min``: the cheap payload was already enough.
+
+``schedule_update`` returns True when k changed, which is the caller's
+signal to rebuild its jitted step.  ``wire_bits`` always reflects the
+*current* k, so per-step ledger entries stay exact; ``delta_bound`` is
+the conservative k_min/d floor that holds for every phase of the run.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from .sparsify import TopK
+
+
+class AdaptiveTopK(TopK):
+    """Top-k with a host-side k schedule in [k_min, k_max]."""
+
+    def __init__(self, d: int, k_min: int, k_max: int, *,
+                 value_bits: int = 32, plateau_tol: float = 0.05,
+                 shrink_tol: float = 0.5, patience: int = 3,
+                 delta_target: float = 0.5):
+        assert 1 <= k_min <= k_max <= d
+        super().__init__(k_min, value_bits=value_bits)
+        self.d = int(d)
+        self.k_min = int(k_min)
+        self.k_max = int(k_max)
+        self.plateau_tol = plateau_tol
+        self.shrink_tol = shrink_tol
+        self.patience = int(patience)
+        self.delta_target = delta_target
+        self._grad_norms: deque = deque(maxlen=self.patience + 1)
+        self.name = f"adaptive_topk[{self.k_min},{self.k_max}]"
+
+    # -- schedule (host-side; call between executed steps) --------------
+    def schedule_update(self, *, grad_norm: float | None = None,
+                        measured_delta: float | None = None) -> bool:
+        """Feed the measured signals; returns True when k changed (the
+        caller must then re-trace anything that baked the old k in)."""
+        old_k = self.k
+        if grad_norm is not None:
+            self._grad_norms.append(float(grad_norm))
+        if len(self._grad_norms) == self._grad_norms.maxlen:
+            first, last = self._grad_norms[0], self._grad_norms[-1]
+            rel = (first - last) / max(first, 1e-30)
+            if rel < self.plateau_tol and self.k < self.k_max:
+                self.k = min(self.k_max, 2 * self.k)
+            elif (rel > self.shrink_tol and self.k > self.k_min
+                  and (measured_delta is None
+                       or measured_delta >= self.delta_target)):
+                self.k = max(self.k_min, self.k // 2)
+            if self.k != old_k:
+                self._grad_norms.clear()
+        return self.k != old_k
+
+    # -- δ accounting: the guarantee must hold for the whole run --------
+    def delta_bound(self, d):
+        return min(self.k_min, d) / d

@@ -10,6 +10,11 @@ Configs carry compressors as frozen-dataclass-friendly *spec strings*:
     "signnorm"      scaled sign, 1 bit/coordinate
     "int8"          block-wise int8, block = 128
     "int8:64"       block-wise int8, block = 64
+    "adaptive_topk:0.05:0.5"
+                    top-k whose k follows a host-side schedule between
+                    k_min = 0.05·d and k_max = 0.5·d (grad-norm plateau
+                    grows k, fast progress shrinks it — see adaptive.py);
+                    both bounds take the same ratio/absolute k grammar
 
 ``make_compressor(spec, d)`` resolves the string against the vector
 dimension d (needed to turn ratios into static k); passing an already-
@@ -19,12 +24,14 @@ from __future__ import annotations
 
 from typing import Optional, Union
 
+from .adaptive import AdaptiveTopK
 from .base import Compressor, Identity
 from .quant import BlockInt8
 from .sign import SignNorm
 from .sparsify import RandomK, TopK
 
-COMPRESSORS = ("none", "topk", "topk_kernel", "randk", "signnorm", "int8")
+COMPRESSORS = ("none", "topk", "topk_kernel", "randk", "signnorm", "int8",
+               "adaptive_topk")
 
 
 def _resolve_k(arg: str, d: int) -> int:
@@ -49,6 +56,11 @@ def make_compressor(
         return TopK(k, use_kernel=head == "topk_kernel")
     if head == "randk":
         return RandomK(_resolve_k(arg or "0.1", d))
+    if head == "adaptive_topk":
+        lo, _, hi = arg.partition(":")
+        k_min = _resolve_k(lo or "0.05", d)
+        k_max = _resolve_k(hi or "0.5", d)
+        return AdaptiveTopK(d, min(k_min, k_max), max(k_min, k_max))
     if head == "signnorm":
         return SignNorm()
     if head == "int8":

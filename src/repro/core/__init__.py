@@ -9,9 +9,13 @@
   workers, HVP cubic solves, masked-all-reduce trimming).
 * :mod:`repro.core.byzantine_pgd` — ByzantinePGD [YCKB19] baseline.
 
-Both runtimes accept a δ-approximate compressor for the worker→center
+Both runtimes transmit exclusively through :mod:`repro.comm` channels —
 uplink (``NewtonConfig.compressor`` / ``DistributedNewtonConfig.compressor``
-or ``make_train_step(compressor=…)``) — see :mod:`repro.compression`.
+or ``make_train_step(compressor=…)``), downlink broadcast
+(``downlink_compressor``), and the Remark-5 gradient round
+(``NewtonConfig.grad_compressor``) — with exact integer wire accounting
+on a :class:`repro.comm.WireLedger`.  Error feedback at mesh scale comes
+from :func:`make_stateful_train_step`.
 """
 from .aggregation import (
     AGGREGATORS,
@@ -35,9 +39,10 @@ from .cubic import (
 )
 from .distributed import (
     DistributedNewtonConfig,
+    build_channels,
     make_robust_sgd_step,
+    make_stateful_train_step,
     make_train_step,
-    wire_bits_per_step,
 )
 from .newton import AttackConfig, DistributedCubicNewton, NewtonConfig
 
@@ -53,6 +58,7 @@ __all__ = [
     "NewtonConfig",
     "PGDConfig",
     "UPDATE_ATTACKS",
+    "build_channels",
     "byzantine_mask",
     "coordinate_median",
     "cubic_model_value",
@@ -60,6 +66,7 @@ __all__ = [
     "krum",
     "make_hvp",
     "make_robust_sgd_step",
+    "make_stateful_train_step",
     "make_train_step",
     "mean",
     "norm_trim",
@@ -68,5 +75,4 @@ __all__ = [
     "solve_cubic_gd",
     "solve_cubic_hvp",
     "trimmed_mean",
-    "wire_bits_per_step",
 ]

@@ -23,10 +23,17 @@ Two gradient modes (paper's Remark 5):
   gradient (ε_g = 0) and, as a bonus at scale, removes the m-fold gradient
   memory: only s_i is per-worker.
 
-Communication efficiency (§1's third pillar): ``compressor=`` applies a
-δ-approximate compressor (:mod:`repro.compression`) to every worker's
-update tree before the masked all-reduce, with exact per-worker wire-bit
-accounting surfaced in the step metrics.
+Communication (§1's third pillar) routes through :mod:`repro.comm`
+:class:`~repro.comm.TreeChannel` instances: the **uplink** channel
+δ-compresses every worker's update tree before the masked all-reduce and
+owns the Byzantine-injection hook; an optional **downlink** channel
+compresses the center→worker broadcast of the aggregated update.
+:func:`make_stateful_train_step` additionally threads the channels'
+``(m, …)`` error-feedback pytree through the step (sharding constraints
+re-applied), so long mesh runs get EF/EF21.  Exact integer wire costs
+come from ``step.wire_bits(params)`` (static ints; feed them to a
+host-side :class:`~repro.comm.WireLedger` per executed step — the traced
+program never carries a lossy bit count).
 """
 from __future__ import annotations
 
@@ -38,7 +45,7 @@ import jax.numpy as jnp
 
 from . import attacks as attacks_lib
 from .tree_util import tree_axpy, tree_size, tree_sqnorm
-from ..compression import TreeCompressor
+from ..comm import TreeChannel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,32 +57,14 @@ class DistributedNewtonConfig:
     solver_iters: int = 4        # fixed inner iterations (static program)
     solver_lr: Optional[float] = None
     two_round: bool = False      # Remark 5: exact global gradient
-    # δ-approximate compression of each worker's update tree before the
-    # masked all-reduce: a repro.compression spec string ("topk:0.1",
-    # "signnorm", "int8", …) resolved per leaf — None ⇒ full precision.
-    compressor: Optional[str] = None
-
-
-def wire_bits_per_step(params, cfg: DistributedNewtonConfig, compressor=None) -> int:
-    """Exact uplink bits ONE worker pays per train step (static Python int;
-    the mesh mirror of ``DistributedCubicNewton.wire_bits_per_step``).
-
-    Counts the (possibly compressed) update-tree payload, plus the
-    full-precision local gradient in ``two_round`` mode.  Use this for
-    accounting at scale — the per-step ``wire_bits_per_worker`` metric is
-    a float32 convenience and loses integer exactness above 2²⁴ bits.
-    """
-    d = tree_size(params)
-    spec = compressor if compressor is not None else cfg.compressor
-    if spec is None:
-        bits = 32 * d
-    else:
-        if not isinstance(spec, TreeCompressor):
-            spec = TreeCompressor(spec)
-        bits = spec.wire_bits_tree(params, 1)
-    if cfg.two_round:
-        bits += 32 * d
-    return bits
+    # δ-approximate compression (repro.compression spec strings resolved
+    # per leaf — None ⇒ full precision) for the two wire segments:
+    compressor: Optional[str] = None           # worker→center update trees
+    downlink_compressor: Optional[str] = None  # center→worker broadcast
+    # error feedback ("none" | "ef" | "ef21") — only the *stateful* step
+    # variant threads the (m, d)-tree memory; make_train_step ignores it.
+    error_feedback: str = "none"
+    ef_damping: float = 0.75
 
 
 def _per_worker_norms(s_tree, m):
@@ -97,8 +86,25 @@ def _merge_workers(batch):
     )
 
 
-def make_train_step(
-    loss_fn: Callable,
+def _tree_attack_hook(attack_name: str, attack_alpha: float, m: int):
+    """Update-level Byzantine injection over a worker-stacked tree."""
+    if attack_name == "none" or attack_alpha <= 0:
+        return None
+    mask = attacks_lib.byzantine_mask(m, attack_alpha)
+    kw = {"sigma": 10.0} if attack_name == "gaussian" else {}
+
+    def hook(key, tree):
+        return jax.tree_util.tree_map(
+            lambda x: attacks_lib.UPDATE_ATTACKS[attack_name](
+                key, x, mask, **kw
+            ),
+            tree,
+        )
+
+    return hook
+
+
+def build_channels(
     cfg: DistributedNewtonConfig,
     m_workers: int,
     attack_name: str = "none",
@@ -106,32 +112,50 @@ def make_train_step(
     constrain_worker: Optional[Callable] = None,
     constrain_update: Optional[Callable] = None,
     compressor=None,
+    stateful: bool = False,
 ):
-    """Build ``train_step(params, batch, key) -> (params, metrics)``.
+    """Resolve the mesh step's channels once (shared by both step builders).
 
-    ``loss_fn(params, batch) -> scalar``; every leaf of ``batch`` carries a
-    leading worker axis of size ``m_workers`` (sharded over data(+pod)).
-    ``constrain_worker`` / ``constrain_update`` apply sharding constraints to
-    worker-stacked / aggregated update trees (supplied by repro.launch).
-
-    ``compressor`` (or ``cfg.compressor``) turns on δ-approximate
-    compression of each worker's update tree *before* the masked
-    all-reduce — a :class:`repro.compression.TreeCompressor`, or a spec
-    string ("topk:0.1", …).  Per-leaf shapes stay static and the worker
-    sharding constraint is re-applied to the reconstructed tree, so
-    GSPMD sees the same layout as the uncompressed step.  Error
-    feedback at mesh scale would thread (m, d) state through the step
-    signature — left as a ROADMAP follow-on.
+    Returns ``{"uplink": TreeChannel, "downlink": TreeChannel}``.
     """
+    ef = cfg.error_feedback if stateful else "none"
+    uplink = TreeChannel(
+        "uplink",
+        compressor if compressor is not None else cfg.compressor,
+        m_workers,
+        error_feedback=ef,
+        damping=cfg.ef_damping,
+        attack_hook=_tree_attack_hook(attack_name, attack_alpha, m_workers),
+        constrain=constrain_worker,
+    )
+    downlink = TreeChannel(
+        "downlink",
+        cfg.downlink_compressor,
+        1,
+        error_feedback=ef,
+        damping=cfg.ef_damping,
+        constrain=constrain_update,
+    )
+    return {"uplink": uplink, "downlink": downlink}
+
+
+def _make_step(
+    loss_fn: Callable,
+    cfg: DistributedNewtonConfig,
+    m_workers: int,
+    channels: dict,
+    constrain_worker: Optional[Callable],
+    constrain_update: Optional[Callable],
+    stateful: bool,
+):
+    """The shared step body; see make_train_step / make_stateful_train_step."""
     m = m_workers
     n_keep = max(1, int(round((1.0 - cfg.beta) * m)))
     grad_fn = jax.grad(loss_fn)
     cw = constrain_worker or (lambda t: t)
     cu = constrain_update or (lambda t: t)
-    spec = compressor if compressor is not None else cfg.compressor
-    if spec is not None and not isinstance(spec, TreeCompressor):
-        spec = TreeCompressor(spec)
-    tc: Optional[TreeCompressor] = spec
+    uplink: TreeChannel = channels["uplink"]
+    downlink: TreeChannel = channels["downlink"]
 
     def hvp_all(params, batch, s):
         """Per-worker H_i·s_i on each worker's local batch (m-stacked)."""
@@ -172,7 +196,7 @@ def make_train_step(
         L_sub = cfg.gamma * lam + 1.5 * cfg.M * cfg.gamma**2 * r_max
         return 1.0 / (1.5 * L_sub + 1e-8)
 
-    def train_step(params, batch, key):
+    def step_body(params, batch, key, comm_state):
         # loss is a by-product of the gradient pass (value_and_grad) — a
         # separate monitoring forward would cost ~9% of the whole step
         # (§Perf iteration 1).
@@ -225,23 +249,14 @@ def make_train_step(
         )
         s = jax.lax.fori_loop(0, cfg.solver_iters, body, s0)
 
-        # ---- δ-compress honest worker→center payloads ----
-        # (before injection: Byzantine workers send arbitrary vectors, so
-        # the attacks corrupt the reconstructed tree, as in repro.core.newton)
-        k_atk, k_comp = jax.random.split(key)
-        if tc is not None:
-            s = cw(tc.roundtrip_worker_tree(s, k_comp, m))
-
-        # ---- Byzantine injection (update-level attacks at scale) ----
-        if attack_name != "none" and attack_alpha > 0:
-            mask = attacks_lib.byzantine_mask(m, attack_alpha)
-            kw = {"sigma": 10.0} if attack_name == "gaussian" else {}
-            s = jax.tree_util.tree_map(
-                lambda x: attacks_lib.UPDATE_ATTACKS[attack_name](
-                    k_atk, x, mask, **kw
-                ),
-                s,
-            )
+        # ---- uplink channel: δ-compress (+EF) then Byzantine-inject ----
+        # (attacks corrupt the reconstructed tree — Byzantine workers send
+        # arbitrary payloads, so compression grants them no protection)
+        k_atk, k_comp, k_down = jax.random.split(key, 3)
+        up_state = comm_state["uplink"] if stateful else None
+        s, up_state = uplink.transmit(
+            s, up_state, key=k_comp, attack_key=k_atk
+        )
 
         # ---- Center: norm-based thresholding (Algorithm 1 step 6) ----
         norms = _per_worker_norms(s, m)
@@ -253,6 +268,12 @@ def make_train_step(
             return (w * x).sum(0) / jnp.asarray(n_keep, x.dtype)
 
         update = cu(jax.tree_util.tree_map(masked_mean, s))
+
+        # ---- downlink channel: compressed broadcast of the step ----
+        down_state = comm_state["downlink"] if stateful else None
+        update, down_state = downlink.transmit(
+            update, down_state, key=k_down
+        )
         new_params = jax.tree_util.tree_map(
             lambda p, u: (
                 p.astype(jnp.float32) + cfg.eta * u.astype(jnp.float32)
@@ -260,26 +281,120 @@ def make_train_step(
             params,
             update,
         )
-        # wire accounting: uplink bits each worker pays this step (static;
-        # leaf sizes are known at trace time).  two_round's first phase
-        # ships the local gradient at full precision.  float32 metric for
-        # convenience — exact integers via module-level wire_bits_per_step.
-        d_worker = tree_size(params)
-        bits = (
-            tc.wire_bits_tree(s, m) if tc is not None else 32 * d_worker
-        )
-        if cfg.two_round:
-            bits += 32 * d_worker
+        # wire accounting lives OUTSIDE the trace: bits are static ints —
+        # read step.wire_bits(params) and feed a repro.comm.WireLedger per
+        # executed step (no lossy float32 / overflowing int32 in metrics).
         metrics = {
             "loss": loss_val,
             "update_norms": norms,
             "kept": keep,
             "update_norm": jnp.sqrt(tree_sqnorm(update)),
-            "wire_bits_per_worker": jnp.float32(bits),
         }
+        return new_params, metrics, {"uplink": up_state, "downlink": down_state}
+
+    def wire_bits(params) -> dict:
+        """Exact bits one step costs per direction (static Python ints).
+        ``two_round`` adds the full-precision gradient all-reduce (m
+        uplink payloads) and the averaged-gradient broadcast."""
+        d = tree_size(params)
+        up = uplink.bits_per_round(params)
+        down = downlink.bits_per_round(params)
+        if cfg.two_round:
+            up += m * 32 * d
+            down += 32 * d
+        return {"uplink": up, "downlink": down}
+
+    return step_body, wire_bits
+
+
+def make_train_step(
+    loss_fn: Callable,
+    cfg: DistributedNewtonConfig,
+    m_workers: int,
+    attack_name: str = "none",
+    attack_alpha: float = 0.0,
+    constrain_worker: Optional[Callable] = None,
+    constrain_update: Optional[Callable] = None,
+    compressor=None,
+):
+    """Build the stateless ``train_step(params, batch, key) -> (params,
+    metrics)``.
+
+    ``loss_fn(params, batch) -> scalar``; every leaf of ``batch`` carries a
+    leading worker axis of size ``m_workers`` (sharded over data(+pod)).
+    ``constrain_worker`` / ``constrain_update`` apply sharding constraints to
+    worker-stacked / aggregated update trees (supplied by repro.launch).
+
+    All transmissions route through :class:`repro.comm.TreeChannel`
+    (``cfg.compressor`` / ``compressor=`` for the uplink,
+    ``cfg.downlink_compressor`` for the broadcast); this variant carries
+    no error-feedback state — use :func:`make_stateful_train_step` for
+    EF/EF21 at mesh scale.  The channels are exposed as
+    ``train_step.channels`` and the exact static wire cost as
+    ``train_step.wire_bits(params)``.
+    """
+    channels = build_channels(
+        cfg, m_workers, attack_name, attack_alpha,
+        constrain_worker, constrain_update, compressor, stateful=False,
+    )
+    step_body, wire_bits = _make_step(
+        loss_fn, cfg, m_workers, channels,
+        constrain_worker, constrain_update, stateful=False,
+    )
+
+    def train_step(params, batch, key):
+        new_params, metrics, _ = step_body(params, batch, key, None)
         return new_params, metrics
 
+    train_step.channels = channels
+    train_step.wire_bits = wire_bits
     return train_step
+
+
+def make_stateful_train_step(
+    loss_fn: Callable,
+    cfg: DistributedNewtonConfig,
+    m_workers: int,
+    attack_name: str = "none",
+    attack_alpha: float = 0.0,
+    constrain_worker: Optional[Callable] = None,
+    constrain_update: Optional[Callable] = None,
+    compressor=None,
+):
+    """Stateful variant: error feedback at mesh scale.
+
+    Returns ``(train_step, init_comm_state)`` with
+
+        train_step(params, batch, key, comm_state)
+            -> (params, metrics, comm_state)
+        init_comm_state(params) -> {"uplink": (m, …)-tree, "downlink": tree}
+
+    The comm state is the channels' EF/EF21 memory — an ``(m, d)``-tree
+    for the uplink, a param-tree for the downlink broadcast — threaded
+    explicitly so it jits, donates, and (via ``constrain_worker`` /
+    ``constrain_update``, re-applied inside ``transmit``) keeps the same
+    GSPMD layout as the update trees on long mesh runs.  With
+    ``cfg.error_feedback = "none"`` the state is ``()`` and the step
+    degenerates to :func:`make_train_step` plus a trivial carry.
+    """
+    channels = build_channels(
+        cfg, m_workers, attack_name, attack_alpha,
+        constrain_worker, constrain_update, compressor, stateful=True,
+    )
+    step_body, wire_bits = _make_step(
+        loss_fn, cfg, m_workers, channels,
+        constrain_worker, constrain_update, stateful=True,
+    )
+
+    def init_comm_state(params):
+        return {
+            "uplink": channels["uplink"].init_state(params),
+            "downlink": channels["downlink"].init_state(params),
+        }
+
+    step_body.channels = channels
+    step_body.wire_bits = wire_bits
+    return step_body, init_comm_state
 
 
 def make_robust_sgd_step(

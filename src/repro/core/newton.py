@@ -3,10 +3,18 @@
 This module is the *paper-faithful* runtime: m workers simulated on one
 process, explicit per-worker gradients / Hessians (the paper's LIBSVM regime,
 d ≤ a few hundred), the paper's Algorithm 2 inner solver, the four Byzantine
-attacks, norm-based thresholding at the center, and (§1's third pillar)
-δ-approximate compression of the worker→center updates with error
-feedback and exact wire-bit accounting (:mod:`repro.compression`).  It reproduces Figures
-1–3 and Table 1.
+attacks, and norm-based thresholding at the center.
+
+Every transmission goes through :mod:`repro.comm` — the unified
+communication-channel layer (§1's third pillar / COMRADE): an **uplink**
+:class:`~repro.comm.VectorChannel` carries the δ-compressed worker
+updates s_i with per-worker EF/EF21 state and the Byzantine-injection
+hook; an optional **downlink** channel compresses the center→worker
+broadcast of the aggregated step; in two-round (Remark 5) mode the
+gradient round is a second uplink channel with its own EF21 state, so
+ε_g = 0 no longer costs full precision on the wire.  Exact integer wire
+accounting comes from the channels' static ``bits_per_round`` feeding a
+host-side :class:`~repro.comm.WireLedger` (never a lossy traced float).
 
 The at-scale (mesh-sharded, matrix-free) variant for the assigned
 architectures lives in :mod:`repro.core.distributed`.
@@ -14,16 +22,16 @@ architectures lives in :mod:`repro.core.distributed`.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import attacks as attacks_lib
-from .aggregation import AGGREGATORS, norm_trim
+from .aggregation import norm_trim
 from .cubic import solve_cubic_gd
-from ..compression import make_compressor, make_error_feedback
+from ..comm import VectorChannel, WireLedger
+from ..compression import AdaptiveTopK
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,10 +46,12 @@ class NewtonConfig:
     solver_iters: int = 500  # cap for Algorithm 2's while-loop
     exact_gradient: bool = False  # Remark 5: extra round ⇒ ε_g = 0
     momentum: float = 0.0    # beyond-paper: CR-with-momentum [WZLL20]
-    # δ-approximate compression of the worker→center update s_i (§1's
-    # third pillar / COMRADE): a repro.compression spec string, e.g.
-    # "topk:0.1", "signnorm", "int8" — None ⇒ full precision.
-    compressor: Optional[str] = None
+    # δ-approximate compression (repro.compression spec strings, e.g.
+    # "topk:0.1", "signnorm", "adaptive_topk:0.05:0.5"; None ⇒ full
+    # precision) for the three wire segments, each its own channel:
+    compressor: Optional[str] = None           # uplink: worker updates s_i
+    downlink_compressor: Optional[str] = None  # center→worker broadcast
+    grad_compressor: Optional[str] = None      # Remark-5 gradient round
     error_feedback: str = "ef21"  # "none" | "ef" | "ef21" (tracking)
     ef_damping: float = 0.75      # θ; mid-plateau on w8a (see error_feedback.py)
 
@@ -61,6 +71,11 @@ class DistributedCubicNewton:
     ``loss_fn(w, X, y) -> scalar`` is the per-worker empirical loss; workers'
     data is stacked on a leading axis: ``X: (m, n, d)``, ``y: (m, n)``.
     One ``step`` = one communication round (two if ``exact_gradient``).
+
+    Channels (and their compressors / error-feedback wrappers) are
+    resolved ONCE, lazily at the first step for the observed ``(d, m)``
+    — never inside a trace.  ``self.ledger`` accumulates exact integer
+    uplink/downlink bits host-side.
     """
 
     def __init__(
@@ -74,8 +89,72 @@ class DistributedCubicNewton:
         self.attack = attack
         self._grad_fn = jax.grad(loss_fn)
         self._hess_fn = jax.hessian(loss_fn)
-        self._step = jax.jit(self._step_impl)
         self.rounds_per_step = 2 if config.exact_gradient else 1
+        self.ledger = WireLedger()
+        # channels need (d, m); built once at the first step
+        self._dims: Optional[tuple] = None
+        self.uplink: Optional[VectorChannel] = None
+        self.downlink: Optional[VectorChannel] = None
+        self.grad_uplink: Optional[VectorChannel] = None
+        self._rebuild_jit()
+
+    # -- channel construction (once per (d, m), never per trace) -------
+    def _rebuild_jit(self):
+        """(Re)create the jitted step — required whenever a channel's
+        static shape (an adaptive compressor's k) changes."""
+        self._step = jax.jit(self._step_impl)
+
+    def _attack_hook(self, m: int):
+        atk = self.attack
+        if atk.name not in attacks_lib.UPDATE_ATTACKS or atk.name == "none":
+            return None
+        mask = attacks_lib.byzantine_mask(m, atk.alpha)
+        kwargs = self._attack_kwargs()
+
+        def hook(key, s):
+            return attacks_lib.UPDATE_ATTACKS[atk.name](key, s, mask, **kwargs)
+
+        return hook
+
+    def _ensure_channels(self, d: int, m: int):
+        if self._dims == (d, m):
+            return
+        cfg = self.config
+        self.uplink = VectorChannel(
+            "uplink", cfg.compressor, d, m,
+            error_feedback=cfg.error_feedback, damping=cfg.ef_damping,
+            attack_hook=self._attack_hook(m),
+        )
+        self.downlink = VectorChannel(
+            "downlink", cfg.downlink_compressor, d, 1,
+            error_feedback=cfg.error_feedback, damping=cfg.ef_damping,
+        )
+        # Remark-5 gradient round: its own channel + EF21 state, so the
+        # extra round no longer forces full precision on the wire.
+        self.grad_uplink = VectorChannel(
+            "uplink", cfg.grad_compressor, d, m,
+            error_feedback=cfg.error_feedback, damping=cfg.ef_damping,
+        ) if cfg.exact_gradient else None
+        if self._dims is not None:
+            self._rebuild_jit()   # stale trace would bake the old channels in
+        self._dims = (d, m)
+
+    @property
+    def channels(self):
+        """The live channels (built at first step), keyed by segment."""
+        chans = {"uplink": self.uplink, "downlink": self.downlink}
+        if self.grad_uplink is not None:
+            chans["grad_uplink"] = self.grad_uplink
+        return chans
+
+    def init_comm_state(self):
+        """Fresh channel-state pytree (per-worker EF memories)."""
+        return {
+            "uplink": self.uplink.init_state(),
+            "downlink": self.downlink.init_state(),
+            "grad": (self.grad_uplink.init_state()
+                     if self.grad_uplink is not None else jnp.zeros((0,))),
+        }
 
     # ------------------------------------------------------------------
     def _worker_solve(self, w, X, y, global_g):
@@ -92,11 +171,12 @@ class DistributedCubicNewton:
             max_iters=cfg.solver_iters,
         )
 
-    def _step_impl(self, w, v, e, X, y, key):
+    def _step_impl(self, w, v, state, X, y, key):
         cfg, atk = self.config, self.attack
         m = X.shape[0]
         mask = attacks_lib.byzantine_mask(m, atk.alpha)
-        k_label, k_update, k_comp = jax.random.split(key, 3)
+        k_label, k_update, k_comp, k_grad, k_down = jax.random.split(key, 5)
+        new_state = dict(state)
 
         # Data-level attacks corrupt Byzantine workers' labels *before* the
         # local computation (they "train on wrong labels", §6).
@@ -108,38 +188,27 @@ class DistributedCubicNewton:
 
         global_g = None
         if cfg.exact_gradient:
-            # Remark 5: round 1 ships local gradients; center averages and
-            # broadcasts ∇f(x_k).  Byzantine workers corrupt their share too,
-            # so we guard the average with the same norm-trim rule.
+            # Remark 5: round 1 ships local gradients through the gradient
+            # channel (δ-compressed + EF21 when configured); the center
+            # averages and broadcasts ∇f(x_k).  Byzantine workers corrupt
+            # their share too, so we guard with the same norm-trim rule.
             per_g = jax.vmap(self._grad_fn, in_axes=(None, 0, 0))(w, X, y_used)
+            per_g, new_state["grad"] = self.grad_uplink.transmit(
+                per_g, state["grad"], key=k_grad
+            )
             global_g, _ = norm_trim(per_g, max(cfg.beta, 1e-9))
 
         s = jax.vmap(
             lambda Xi, yi: self._worker_solve(w, Xi, yi, global_g)
         )(X, y_used)
 
-        # Honest workers δ-compress s_i before transmitting, with EF/EF21
-        # memory carrying the compression residual across rounds.
-        # Byzantine workers send arbitrary payloads anyway, so the update
-        # attacks below corrupt the *reconstructed* vectors.
-        comp = make_compressor(cfg.compressor, w.shape[0])
-        if comp is not None:
-            ef = make_error_feedback(cfg.error_feedback, comp, cfg.ef_damping)
-            keys = jax.random.split(k_comp, m)
-            if ef is not None:
-                s, e = jax.vmap(lambda xi, ei, ki: ef.apply(xi, ei, key=ki))(
-                    s, e, keys
-                )
-            else:
-                s = jax.vmap(lambda xi, ki: comp.roundtrip(xi, key=ki))(
-                    s, keys
-                )
-
-        # Update-level attacks corrupt what Byzantine workers *send*.
-        if atk.name in attacks_lib.UPDATE_ATTACKS and atk.name != "none":
-            s = attacks_lib.UPDATE_ATTACKS[atk.name](
-                k_update, s, mask, **self._attack_kwargs()
-            )
+        # Uplink: honest workers δ-compress s_i (EF/EF21 memory carries the
+        # residual across rounds); the channel's Byzantine hook corrupts the
+        # *reconstructed* vectors — Byzantine workers send arbitrary
+        # payloads, so compression grants them no protection.
+        s, new_state["uplink"] = self.uplink.transmit(
+            s, state["uplink"], key=k_comp, attack_key=k_update
+        )
 
         # Center: norm-based thresholding (Algorithm 1, step 6).
         if cfg.beta > 0:
@@ -149,8 +218,16 @@ class DistributedCubicNewton:
         # optional momentum on the aggregated direction (CRm, [WZLL20] —
         # cited in §2; the paper itself uses v ≡ agg, i.e. momentum = 0)
         v_new = cfg.momentum * v + agg
-        w_new = w + cfg.eta * v_new
-        return w_new, v_new, e, {
+
+        # Downlink: the center broadcasts the aggregated step η·v through
+        # its own channel (EF state lives at the center); every worker —
+        # and the center's own iterate — applies the same reconstruction,
+        # so the cluster stays in sync.
+        delta, new_state["downlink"] = self.downlink.transmit(
+            cfg.eta * v_new, state["downlink"], key=k_down
+        )
+        w_new = w + delta
+        return w_new, v_new, new_state, {
             "update_norms": jnp.linalg.norm(s, axis=-1), "keep": keep,
         }
 
@@ -162,24 +239,38 @@ class DistributedCubicNewton:
         return {}
 
     # ------------------------------------------------------------------
-    def step(self, w, X, y, key, v=None, e=None):
-        """One round.  Returns (w, v, e, info) where ``e`` is the workers'
-        (m, d) error-feedback memory (zeros when compression is off)."""
+    def step(self, w, X, y, key, v=None, state=None):
+        """One round.  Returns (w, v, state, info) where ``state`` is the
+        channel-state pytree (per-worker EF memories; see
+        :meth:`init_comm_state`)."""
+        self._ensure_channels(w.shape[0], X.shape[0])
         v = jnp.zeros_like(w) if v is None else v
-        e = self._init_error(w, X.shape[0]) if e is None else e
-        return self._step(w, v, e, X, y, key)
+        state = self.init_comm_state() if state is None else state
+        return self._step(w, v, state, X, y, key)
 
-    def _init_error(self, w, m):
-        return jnp.zeros((m, w.shape[0]), jnp.float32)
+    # -- wire accounting ------------------------------------------------
+    def bits_per_step(self) -> dict:
+        """Exact bits ONE step costs per direction (static Python ints;
+        channels must exist — i.e. after the first step or
+        :meth:`_ensure_channels`).  Two-round mode adds the gradient
+        channel uplink and the full-precision gradient broadcast."""
+        up = self.uplink.bits_per_round()
+        down = self.downlink.bits_per_round()
+        if self.grad_uplink is not None:
+            up += self.grad_uplink.bits_per_round()
+            down += 32 * self.uplink.d  # center broadcasts the averaged g
+        return {"uplink": up, "downlink": down}
 
-    def wire_bits_per_step(self, d: int, m: int) -> int:
-        """Exact uplink bits one *step* costs: m compressed s_i payloads,
-        plus (in two-round mode) m full-precision local gradients."""
-        comp = make_compressor(self.config.compressor, d)
-        bits = m * (comp.wire_bits(d) if comp is not None else 32 * d)
-        if self.config.exact_gradient:
-            bits += m * 32 * d   # Remark-5 gradient round is uncompressed
-        return bits
+    def _maybe_adapt(self, grad_norm: float) -> None:
+        """Feed adaptive compressors the host-side signals; rebuild the
+        jitted step when any k changed (static shapes moved)."""
+        changed = False
+        for ch in self.channels.values():
+            comp = ch.compressor
+            if isinstance(comp, AdaptiveTopK):
+                changed |= comp.schedule_update(grad_norm=grad_norm)
+        if changed:
+            self._rebuild_jit()
 
     def run(
         self,
@@ -193,7 +284,9 @@ class DistributedCubicNewton:
         full_data=None,
     ):
         """Run Algorithm 1 for ``n_steps`` (or until ‖∇f‖ ≤ grad_tol on the
-        pooled data).  Returns (w, history dict)."""
+        pooled data).  Returns (w, history dict); the history carries the
+        exact integer uplink/downlink wire totals from the ledger plus the
+        per-step cumulative total (the bits-to-ε curve's x axis)."""
         key = key if key is not None else jax.random.PRNGKey(0)
         if full_data is None:
             full_data = (X.reshape(-1, X.shape[-1]), y.reshape(-1))
@@ -201,17 +294,22 @@ class DistributedCubicNewton:
         gradf = jax.jit(jax.grad(self.loss_fn))
         lossf = jax.jit(self.loss_fn)
 
+        self._ensure_channels(w0.shape[0], X.shape[0])
+        ledger = self.ledger
+        ledger.reset()
         hist = {"loss": [], "grad_norm": [], "eval": [], "rounds": 0,
-                "wire_bits": 0}
-        bits_per_step = self.wire_bits_per_step(w0.shape[0], X.shape[0])
+                "bits_cumulative": []}
         w = w0
         v = jnp.zeros_like(w0)
-        e = self._init_error(w0, X.shape[0])
+        state = self.init_comm_state()
         for t in range(n_steps):
             key, sub = jax.random.split(key)
-            w, v, e, _ = self.step(w, X, y, sub, v, e)
-            hist["rounds"] += self.rounds_per_step
-            hist["wire_bits"] += bits_per_step
+            w, v, state, _ = self.step(w, X, y, sub, v, state)
+            # re-read every step: adaptive compressors move k between steps
+            bps = self.bits_per_step()
+            ledger.record(uplink=bps["uplink"], downlink=bps["downlink"],
+                          rounds=self.rounds_per_step)
+            hist["bits_cumulative"].append(ledger.total_bits)
             gn = float(jnp.linalg.norm(gradf(w, Xf, yf)))
             hist["loss"].append(float(lossf(w, Xf, yf)))
             hist["grad_norm"].append(gn)
@@ -219,4 +317,6 @@ class DistributedCubicNewton:
                 hist["eval"].append(float(eval_fn(w)))
             if grad_tol is not None and gn <= grad_tol:
                 break
+            self._maybe_adapt(gn)
+        hist.update(ledger.snapshot())
         return w, hist

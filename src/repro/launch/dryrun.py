@@ -56,12 +56,15 @@ def count_active_params(cfg, n_total):
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             solver_iters: int = 2, two_round: bool = False,
-            worker_groups: int = 1, verbose: bool = True) -> dict:
+            worker_groups: int = 1, compressor: str | None = None,
+            error_feedback: str = "none", verbose: bool = True) -> dict:
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
-    newton = DistributedNewtonConfig(solver_iters=solver_iters, two_round=two_round)
+    newton = DistributedNewtonConfig(
+        solver_iters=solver_iters, two_round=two_round,
+        compressor=compressor, error_feedback=error_feedback)
 
     problem = make_problem(cfg, shape, mesh, newton, worker_groups=worker_groups)
     rec = {
@@ -159,6 +162,11 @@ def main(argv=None):
                     help="Remark-5 exact-gradient variant")
     ap.add_argument("--worker-groups", type=int, default=1,
                     help="coalesce N data rows per worker (memory knob)")
+    ap.add_argument("--compressor", default=None,
+                    help="uplink channel spec (e.g. topk:0.1)")
+    ap.add_argument("--error-feedback", default="none",
+                    choices=["none", "ef", "ef21"],
+                    help="thread mesh-scale EF channel state (stateful step)")
     ap.add_argument("--json", default=None, help="append JSONL records here")
     args = ap.parse_args(argv)
 
@@ -172,7 +180,9 @@ def main(argv=None):
                 rec = run_one(a, s, args.multi_pod,
                               solver_iters=args.solver_iters,
                               two_round=args.two_round,
-                              worker_groups=args.worker_groups)
+                              worker_groups=args.worker_groups,
+                              compressor=args.compressor,
+                              error_feedback=args.error_feedback)
             except Exception as e:  # noqa: BLE001 — report, keep sweeping
                 rec = {"arch": a, "shape": s, "status": "error",
                        "error": f"{type(e).__name__}: {e}"}

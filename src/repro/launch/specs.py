@@ -14,7 +14,11 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import INPUT_SHAPES, InputShape, ModelConfig
-from ..core.distributed import DistributedNewtonConfig, make_train_step
+from ..core.distributed import (
+    DistributedNewtonConfig,
+    make_stateful_train_step,
+    make_train_step,
+)
 from ..models import build_model
 from .mesh import num_workers, worker_axes
 from ..models import runtime
@@ -135,17 +139,48 @@ def make_problem(
                 ),
             )
 
-        raw_step = make_train_step(
-            model.loss_fn, newton, m,
-            constrain_worker=constrain_worker,
-            constrain_update=constrain_update,
-        )
+        stateful = (newton.error_feedback != "none"
+                    and (newton.compressor is not None
+                         or newton.downlink_compressor is not None))
+        if stateful:
+            # channel-state plumbing: the (m, …) EF tree rides along as an
+            # extra donated arg, sharded like the worker update trees
+            # (uplink) / the aggregated update (downlink).
+            raw_step, init_comm_state = make_stateful_train_step(
+                model.loss_fn, newton, m,
+                constrain_worker=constrain_worker,
+                constrain_update=constrain_update,
+            )
+            comm_struct = jax.eval_shape(init_comm_state, params_shape)
 
-        def step_fn(params, batch):
-            return raw_step(params, batch, jax.random.PRNGKey(0))
+            def _comm_shard(sub, stacked):
+                if not jax.tree_util.tree_leaves(sub):
+                    return sub  # stateless segment: empty carry
+                base = w_shard if stacked else p_shard
+                return jax.tree_util.tree_map(lambda _, sh: sh, sub, base)
 
-        step_fn = _hooked(step_fn)
-        batch = batch_struct(cfg, m, shape.global_batch // m, shape.seq_len)
+            cs_shard = {
+                "uplink": _comm_shard(comm_struct["uplink"], True),
+                "downlink": _comm_shard(comm_struct["downlink"], False),
+            }
+
+            def step_fn(params, batch, comm_state):
+                return raw_step(params, batch, jax.random.PRNGKey(0), comm_state)
+
+            step_fn = _hooked(step_fn)
+            batch = batch_struct(cfg, m, shape.global_batch // m, shape.seq_len)
+        else:
+            raw_step = make_train_step(
+                model.loss_fn, newton, m,
+                constrain_worker=constrain_worker,
+                constrain_update=constrain_update,
+            )
+
+            def step_fn(params, batch):
+                return raw_step(params, batch, jax.random.PRNGKey(0))
+
+            step_fn = _hooked(step_fn)
+            batch = batch_struct(cfg, m, shape.global_batch // m, shape.seq_len)
         if grouped:
             # m replicated; the (bigger) per-worker batch shards over the
             # data(+pod) rows instead.
@@ -159,6 +194,11 @@ def make_problem(
         else:
             b_shard = jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), batch_specs(batch, mesh)
+            )
+        if stateful:
+            return DryrunProblem(
+                step_fn, (params_shape, batch, comm_struct),
+                (p_shard, b_shard, cs_shard), label, None,
             )
         return DryrunProblem(step_fn, (params_shape, batch), (p_shard, b_shard), label, None)
 

@@ -19,8 +19,14 @@ import jax
 import jax.numpy as jnp
 
 from ..checkpoint import save_checkpoint
+from ..comm import WireLedger
 from ..configs import get_config
-from ..core.distributed import DistributedNewtonConfig, make_robust_sgd_step, make_train_step
+from ..core.distributed import (
+    DistributedNewtonConfig,
+    make_robust_sgd_step,
+    make_stateful_train_step,
+    make_train_step,
+)
 from ..data import WorkerBatcher
 from ..models import build_model
 
@@ -63,6 +69,9 @@ def run_training(
     optimizer: str = "cubic_newton",
     lr: float = 0.3,
     two_round: bool = False,
+    compressor: str | None = None,
+    downlink_compressor: str | None = None,
+    error_feedback: str = "none",
     seed: int = 0,
     ckpt_dir: str | None = None,
     log_every: int = 10,
@@ -75,35 +84,63 @@ def run_training(
     print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
           f"m={m_workers} attack={attack}@{alpha} optimizer={optimizer}")
 
+    ledger = WireLedger()
+    comm_state = None
+    wire_bits = None
     if optimizer == "cubic_newton":
         ncfg = DistributedNewtonConfig(
-            M=M, eta=eta, beta=beta, solver_iters=solver_iters, two_round=two_round
+            M=M, eta=eta, beta=beta, solver_iters=solver_iters,
+            two_round=two_round, compressor=compressor,
+            downlink_compressor=downlink_compressor,
+            error_feedback=error_feedback,
         )
-        step = make_train_step(
-            model.loss_fn, ncfg, m_workers,
-            attack_name=attack, attack_alpha=alpha,
-        )
+        if error_feedback != "none":
+            # stateful channels: the (m, d)-tree EF memory is threaded (and
+            # donated) through the step so long runs keep error feedback.
+            raw_step, init_comm_state = make_stateful_train_step(
+                model.loss_fn, ncfg, m_workers,
+                attack_name=attack, attack_alpha=alpha,
+            )
+            comm_state = init_comm_state(params)
+            step = jax.jit(raw_step, donate_argnums=(3,))
+        else:
+            raw_step = make_train_step(
+                model.loss_fn, ncfg, m_workers,
+                attack_name=attack, attack_alpha=alpha,
+            )
+            step = jax.jit(raw_step)
+        wire_bits = raw_step.wire_bits(params)  # exact static ints
     else:
-        step = make_robust_sgd_step(model.loss_fn, lr, m_workers, beta=beta)
-    step = jax.jit(step)
+        step = jax.jit(make_robust_sgd_step(model.loss_fn, lr, m_workers, beta=beta))
 
     batcher = WorkerBatcher(cfg, m_workers, m_workers * per_worker_batch, seq_len, seed)
     history = []
     t0 = time.time()
     for it in range(steps):
         key, sub = jax.random.split(key)
-        params, metrics = step(params, batcher(it), sub)
+        if comm_state is not None:
+            params, metrics, comm_state = step(params, batcher(it), sub, comm_state)
+        else:
+            params, metrics = step(params, batcher(it), sub)
+        if wire_bits is not None:
+            ledger.record(uplink=wire_bits["uplink"],
+                          downlink=wire_bits["downlink"],
+                          rounds=2 if two_round else 1)
         loss = float(metrics["loss"])
         history.append(loss)
         if it % log_every == 0 or it == steps - 1:
             dt = time.time() - t0
+            wire = (f" wire_up={ledger.uplink_bits} wire_down={ledger.downlink_bits}"
+                    if wire_bits is not None else "")
             print(f"[train] step={it:5d} loss={loss:.4f} "
                   f"update_norm={float(metrics.get('update_norm', 0.0)):.3e} "
-                  f"({dt/(it+1):.2f}s/step)")
+                  f"({dt/(it+1):.2f}s/step){wire}")
         if ckpt_dir and (it + 1) % 100 == 0:
             save_checkpoint(ckpt_dir, params, it + 1, {"loss": loss})
     if ckpt_dir:
         save_checkpoint(ckpt_dir, params, steps, {"loss": history[-1]})
+    if wire_bits is not None:
+        print(f"[train] wire ledger (exact ints): {ledger.snapshot()}")
     return params, history
 
 
@@ -126,6 +163,13 @@ def main(argv=None):
                     choices=["cubic_newton", "robust_sgd"])
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--two-round", action="store_true")
+    ap.add_argument("--compressor", default=None,
+                    help="uplink spec, e.g. topk:0.1 / signnorm / int8")
+    ap.add_argument("--downlink-compressor", default=None,
+                    help="center→worker broadcast spec")
+    ap.add_argument("--error-feedback", default="none",
+                    choices=["none", "ef", "ef21"],
+                    help="mesh-scale EF (threads channel state through the step)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

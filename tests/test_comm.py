@@ -1,0 +1,317 @@
+"""repro.comm channel layer: exact ledger accounting, identity-channel
+parity with the uncompressed step in BOTH runtimes, EF-state pytrees under
+jit donation, compressed downlink/two-round-gradient/mesh-EF coverage, and
+the adaptive-k schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import TreeChannel, VectorChannel, WireLedger
+from repro.compression import AdaptiveTopK, make_compressor
+from repro.core import AttackConfig, DistributedCubicNewton, NewtonConfig
+from repro.core.distributed import (
+    DistributedNewtonConfig,
+    make_stateful_train_step,
+    make_train_step,
+)
+from repro.data import make_classification, shard_to_workers
+
+
+def logistic_loss(w, X, y):
+    z = X @ w
+    yy = 2.0 * y - 1.0
+    return jnp.mean(jnp.log1p(jnp.exp(-yy * z))) + 1e-3 * w @ w
+
+
+@pytest.fixture(scope="module")
+def logistic_data():
+    X, y, _ = make_classification(jax.random.PRNGKey(0), 1200, 20, margin=3.0)
+    Xm, ym = shard_to_workers(X, y, 10)
+    return Xm, ym
+
+
+def _quad_setup(rng, m=4, n=32, din=8):
+    wstar = jax.random.normal(rng, (din,))
+    X = jax.random.normal(jax.random.fold_in(rng, 1), (m, n, din))
+    Y = X @ wstar + 0.01 * jax.random.normal(jax.random.fold_in(rng, 2), (m, n))
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    params0 = {"w": jnp.zeros(din), "b": jnp.zeros(())}
+    return loss_fn, params0, {"x": X, "y": Y}
+
+
+# ------------------------- ledger ----------------------------------------
+
+
+def test_wire_ledger_exact_beyond_float32():
+    """The accumulator is a host-side Python int: totals far beyond the
+    float32 mantissa (the seed's lossy metric) stay exact to the bit."""
+    ledger = WireLedger()
+    big = 32 * 405_000_000_000  # 405B params at fp32, > 2**43
+    for _ in range(1000):
+        ledger.record(uplink=big + 1, downlink=3)
+    assert ledger.uplink_bits == 1000 * (big + 1)  # off-by-one survives
+    assert float(np.float32(ledger.uplink_bits)) != ledger.uplink_bits
+    assert ledger.downlink_bits == 3000
+    assert ledger.total_bits == ledger.uplink_bits + 3000
+    assert ledger.rounds == 1000
+    snap = ledger.snapshot()
+    assert snap["uplink_bits"] == ledger.uplink_bits
+    ledger.reset()
+    assert ledger.total_bits == 0 and ledger.rounds == 0
+
+
+def test_vector_channel_bits_per_round():
+    up = VectorChannel("uplink", "topk:0.5", 10, 4)
+    down = VectorChannel("downlink", None, 10, 1)
+    assert up.bits_per_round() == 4 * make_compressor("topk:0.5", 10).wire_bits(10)
+    assert down.bits_per_round() == 32 * 10  # broadcast counted once
+    ledger = WireLedger()
+    up.record(ledger)
+    down.record(ledger, rounds=1)
+    assert ledger.uplink_bits == up.bits_per_round()
+    assert ledger.downlink_bits == down.bits_per_round()
+
+
+# ------------------------- identity-channel parity ------------------------
+
+
+def test_identity_channel_parity_paper_runtime(logistic_data):
+    """compressor="none" (an Identity channel) must reproduce the
+    uncompressed (channel-less wire) step — paper-faithful runtime."""
+    Xm, ym = logistic_data
+    w0 = jnp.zeros(20)
+    plain = DistributedCubicNewton(logistic_loss, NewtonConfig(M=10.0, beta=0.1))
+    ident = DistributedCubicNewton(
+        logistic_loss, NewtonConfig(M=10.0, beta=0.1, compressor="none",
+                                    downlink_compressor="none"))
+    w_p, h_p = plain.run(w0, Xm, ym, 5)
+    w_i, h_i = ident.run(w0, Xm, ym, 5)
+    np.testing.assert_allclose(np.asarray(w_p), np.asarray(w_i),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(h_p["loss"], h_i["loss"], rtol=1e-6)
+    # identity payload is full precision: ledgers must agree exactly
+    assert h_p["uplink_bits"] == h_i["uplink_bits"]
+    assert h_p["downlink_bits"] == h_i["downlink_bits"]
+
+
+def test_identity_channel_parity_mesh_runtime(rng):
+    """Same contract on the mesh step (bit-identical, not just allclose)."""
+    loss_fn, params0, batch = _quad_setup(rng)
+    cfg = DistributedNewtonConfig(M=10.0, beta=0.25, solver_iters=4)
+    plain = jax.jit(make_train_step(loss_fn, cfg, 4))
+    ident = jax.jit(make_train_step(loss_fn, cfg, 4, compressor="none"))
+    key = jax.random.PRNGKey(3)
+    p1, m1 = plain(params0, batch, key)
+    p2, m2 = ident(params0, batch, key)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(m1["update_norms"], m2["update_norms"])
+
+
+# ------------------------- EF state under jit donation --------------------
+
+
+def test_newton_comm_state_roundtrips_through_donation(logistic_data):
+    """The channel-state pytree survives donated jit buffers across steps
+    (structure and shapes stable, old buffers safely invalidated)."""
+    Xm, ym = logistic_data
+    algo = DistributedCubicNewton(
+        logistic_loss,
+        NewtonConfig(M=10.0, beta=0.1, compressor="topk:0.3",
+                     downlink_compressor="topk:0.3", exact_gradient=True,
+                     grad_compressor="topk:0.3"),
+    )
+    w = jnp.zeros(20)
+    algo._ensure_channels(20, 10)
+    donated = jax.jit(algo._step_impl, donate_argnums=(2,))
+    v = jnp.zeros_like(w)
+    state = algo.init_comm_state()
+    tdef0 = jax.tree_util.tree_structure(state)
+    key = jax.random.PRNGKey(0)
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        w, v, state, _ = donated(w, v, state, Xm, ym, sub)
+    assert jax.tree_util.tree_structure(state) == tdef0
+    assert state["uplink"].shape == (10, 20)
+    assert state["downlink"].shape == (20,)
+    assert state["grad"].shape == (10, 20)
+    # EF21 memory is live (the tracker moved off its zero init)
+    assert float(jnp.abs(state["uplink"]).sum()) > 0
+    assert jnp.all(jnp.isfinite(w))
+
+
+def test_mesh_comm_state_roundtrips_through_donation(rng):
+    loss_fn, params0, batch = _quad_setup(rng)
+    cfg = DistributedNewtonConfig(
+        M=10.0, beta=0.25, solver_iters=4, compressor="topk:0.5",
+        downlink_compressor="topk:0.5", error_feedback="ef21",
+    )
+    step, init_state = make_stateful_train_step(loss_fn, cfg, 4)
+    jstep = jax.jit(step, donate_argnums=(3,))
+    state = init_state(params0)
+    tdef0 = jax.tree_util.tree_structure(state)
+    params, key = params0, jax.random.PRNGKey(0)
+    losses = []
+    for _ in range(12):
+        key, sub = jax.random.split(key)
+        params, metrics, state = jstep(params, batch, sub, state)
+        losses.append(float(metrics["loss"]))
+    assert jax.tree_util.tree_structure(state) == tdef0
+    assert state["uplink"]["w"].shape == (4, 8)   # (m, d) worker-stacked
+    assert state["downlink"]["w"].shape == (8,)   # center-side memory
+    assert losses[-1] < 0.5 * losses[0]
+    assert all(np.isfinite(losses))
+
+
+# ------------------------- downlink compression ---------------------------
+
+
+def test_downlink_compressed_escapes_saddle_under_byzantine_attack():
+    """The byzantine saddle smoke test with a compressed broadcast: the
+    downlink channel (EF21 at the center) must not re-trap the iterate at
+    the strict saddle the colluding workers pull toward."""
+    from benchmarks.saddle_escape import factor_loss, make_problem
+
+    key = jax.random.PRNGKey(0)
+    d, r, m = 10, 2, 10
+    X, _ = make_problem(key, d=d, r=r, m=m)
+    y = jnp.zeros(X.shape[:2])
+    w0 = 1e-3 * jax.random.normal(jax.random.fold_in(key, 2), (d * r,))
+    saddle_val = float(factor_loss(jnp.zeros(d * r), X.reshape(-1, d), None))
+
+    algo = DistributedCubicNewton(
+        factor_loss,
+        NewtonConfig(M=10.0, eta=1.0, beta=0.2 + 2.0 / m,
+                     downlink_compressor="topk:0.5"),
+        AttackConfig(name="saddle", alpha=0.2),
+    )
+    _, hist = algo.run(w0, X, y, 15)
+    assert hist["loss"][-1] < 0.1 * saddle_val
+    # the broadcast was actually compressed (fewer downlink than fp32 bits)
+    assert hist["downlink_bits"] < hist["rounds"] * 32 * d * r
+
+
+def test_mesh_downlink_compression_converges(rng):
+    loss_fn, params0, batch = _quad_setup(rng)
+    cfg = DistributedNewtonConfig(
+        M=10.0, beta=0.25, solver_iters=4, downlink_compressor="topk:0.5",
+    )
+    step = jax.jit(make_train_step(loss_fn, cfg, 4))
+    raw = make_train_step(loss_fn, cfg, 4)
+    wb = raw.wire_bits(params0)
+    assert wb["downlink"] < 32 * 9  # broadcast is compressed
+    assert wb["uplink"] == 4 * 32 * 9  # uplink untouched
+    params, key = params0, jax.random.PRNGKey(0)
+    losses = []
+    for _ in range(12):
+        key, sub = jax.random.split(key)
+        params, metrics = step(params, batch, sub)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < 0.5 * losses[0]
+
+
+# ------------------------- compressed two-round gradients -----------------
+
+
+def test_compressed_two_round_gradients(logistic_data):
+    """Remark-5 mode with the gradient round on its own compressed channel
+    (own EF21 state): converges, and the wire no longer pays full
+    precision for ε_g = 0."""
+    Xm, ym = logistic_data
+    w0 = jnp.zeros(20)
+    full = DistributedCubicNewton(
+        logistic_loss, NewtonConfig(M=10.0, beta=0.1, exact_gradient=True))
+    comp = DistributedCubicNewton(
+        logistic_loss,
+        NewtonConfig(M=10.0, beta=0.1, exact_gradient=True,
+                     grad_compressor="topk:0.25"))
+    _, h_full = full.run(w0, Xm, ym, 8)
+    _, h_comp = comp.run(w0, Xm, ym, 8)
+    assert h_comp["rounds"] == 16  # still two rounds per step
+    assert h_comp["uplink_bits"] < h_full["uplink_bits"]
+    assert h_comp["grad_norm"][-1] < 0.1
+    # the gradient channel keeps its own EF21 memory, separate from uplink
+    assert comp.grad_uplink is not comp.uplink
+    assert comp.grad_uplink.feedback is not None
+
+
+# ------------------------- adaptive top-k ---------------------------------
+
+
+def test_adaptive_topk_registry_and_schedule():
+    comp = make_compressor("adaptive_topk:0.1:0.5", 100)
+    assert isinstance(comp, AdaptiveTopK)
+    assert comp.k == 10 and comp.k_min == 10 and comp.k_max == 50
+    assert comp.delta_bound(100) == pytest.approx(0.1)
+    # plateau ⇒ grow toward k_max
+    changed = [comp.schedule_update(grad_norm=1.0) for _ in range(comp.patience + 1)]
+    assert any(changed) and comp.k == 20
+    comp.schedule_update(grad_norm=1.0)  # window restarts after a change
+    for _ in range(comp.patience + 1):
+        comp.schedule_update(grad_norm=1.0)
+    assert comp.k == 40
+    # fast progress ⇒ shrink back toward k_min
+    for gn in (1.0, 0.5, 0.2, 0.05, 0.01, 0.001, 1e-4, 1e-5):
+        comp.schedule_update(grad_norm=gn)
+    assert comp.k < 40
+    # wire cost follows the live k; the δ guarantee stays the k_min floor
+    assert comp.wire_bits(100) == comp.k * (32 + 7)
+    assert comp.delta_bound(100) == pytest.approx(0.1)
+
+
+def test_adaptive_topk_end_to_end(logistic_data):
+    """Adaptive-k run converges; the ledger's cumulative series reflects
+    the re-traced k changes exactly (strictly increasing, exact ints)."""
+    Xm, ym = logistic_data
+    algo = DistributedCubicNewton(
+        logistic_loss,
+        NewtonConfig(M=10.0, beta=0.1, compressor="adaptive_topk:0.1:1.0"))
+    w, hist = algo.run(jnp.zeros(20), Xm, ym, 10)
+    assert hist["grad_norm"][-1] < 0.5 * hist["grad_norm"][0]
+    series = hist["bits_cumulative"]
+    assert all(isinstance(b, int) for b in series)
+    assert all(b2 > b1 for b1, b2 in zip(series, series[1:]))
+    assert hist["total_bits"] == series[-1]
+    k_now = algo.uplink.compressor.k
+    assert algo.uplink.compressor.k_min <= k_now <= algo.uplink.compressor.k_max
+
+
+# ------------------------- channel hygiene --------------------------------
+
+
+def test_channels_resolved_once_not_per_trace(logistic_data):
+    """Compressor/EF construction happens at channel build time, not in
+    the traced step (the seed rebuilt them on every trace)."""
+    Xm, ym = logistic_data
+    algo = DistributedCubicNewton(
+        logistic_loss, NewtonConfig(M=10.0, beta=0.1, compressor="topk:0.3"))
+    algo._ensure_channels(20, 10)
+    up = algo.uplink
+    algo.step(jnp.zeros(20), Xm, ym, jax.random.PRNGKey(0))
+    assert algo.uplink is up                       # same channel object
+    assert algo.uplink.compressor is up.compressor  # same compressor
+    # same dims ⇒ no rebuild on subsequent steps either
+    algo.step(jnp.ones(20), Xm, ym, jax.random.PRNGKey(1))
+    assert algo.uplink is up
+
+
+def test_tree_channel_stateless_matches_stateful_none(rng):
+    """error_feedback="none" stateful step ≡ the stateless step (trivial
+    carry), so the two builders can't drift."""
+    loss_fn, params0, batch = _quad_setup(rng)
+    cfg = DistributedNewtonConfig(M=10.0, beta=0.25, solver_iters=3,
+                                  compressor="topk:0.5")
+    stateless = jax.jit(make_train_step(loss_fn, cfg, 4))
+    step, init_state = make_stateful_train_step(loss_fn, cfg, 4)
+    state = init_state(params0)
+    assert jax.tree_util.tree_leaves(state) == []  # no EF ⇒ empty carry
+    key = jax.random.PRNGKey(7)
+    p1, m1 = stateless(params0, batch, key)
+    p2, m2, state2 = jax.jit(step)(params0, batch, key, state)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(a, b)

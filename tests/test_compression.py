@@ -20,7 +20,6 @@ from repro.core import DistributedCubicNewton, NewtonConfig
 from repro.core.distributed import (
     DistributedNewtonConfig,
     make_train_step,
-    wire_bits_per_step,
 )
 
 SPECS = ["topk:0.1", "topk:0.5", "signnorm", "int8", "int8:32"]
@@ -90,9 +89,13 @@ def test_newton_run_accumulates_wire_bits(rng):
         logistic_loss, NewtonConfig(M=10.0, beta=0.0, compressor="topk:0.5")
     )
     _, hist = algo.run(jnp.zeros(10), Xm, ym, 3)
-    per_step = algo.wire_bits_per_step(10, 4)
-    assert per_step == 4 * 5 * (32 + index_bits(10))
-    assert hist["wire_bits"] == 3 * per_step
+    per_step = algo.bits_per_step()
+    assert per_step["uplink"] == 4 * 5 * (32 + index_bits(10))
+    assert per_step["downlink"] == 32 * 10  # uncompressed fp32 broadcast
+    assert hist["uplink_bits"] == 3 * per_step["uplink"]
+    assert hist["downlink_bits"] == 3 * per_step["downlink"]
+    assert hist["total_bits"] == hist["uplink_bits"] + hist["downlink_bits"]
+    assert hist["bits_cumulative"][-1] == hist["total_bits"]
 
 
 # ------------------------- error feedback ---------------------------------
@@ -214,20 +217,20 @@ def test_train_step_compressed_converges_and_counts_bits(rng):
         losses.append(float(metrics["loss"]))
     assert losses[-1] < 0.5 * losses[0]
     assert all(np.isfinite(losses))
-    # d = 9 (w:8 + b:1) at ratio 0.5 → k = 4 on w, 1 on b
-    expected = 4 * (32 + index_bits(8)) + 1 * (32 + index_bits(1))
-    assert float(metrics["wire_bits_per_worker"]) == expected
-    assert wire_bits_per_step(params0, cfg) == expected  # exact static mirror
-    plain_cfg = DistributedNewtonConfig()
-    uncompressed = jax.jit(make_train_step(loss_fn, plain_cfg, 4))
-    _, mu = uncompressed(params0, batch, jax.random.PRNGKey(0))
-    assert float(mu["wire_bits_per_worker"]) == 32 * 9
-    assert wire_bits_per_step(params0, plain_cfg) == 32 * 9
-    # two_round adds the full-precision gradient round
-    assert (
-        wire_bits_per_step(params0, DistributedNewtonConfig(two_round=True))
-        == 2 * 32 * 9
-    )
+    # d = 9 (w:8 + b:1) at ratio 0.5 → k = 4 on w, 1 on b; exact static
+    # ints come from the channels (step.wire_bits), never a traced metric
+    payload = 4 * (32 + index_bits(8)) + 1 * (32 + index_bits(1))
+    raw = make_train_step(loss_fn, cfg, 4)
+    assert raw.wire_bits(params0) == {"uplink": 4 * payload,
+                                      "downlink": 32 * 9}
+    plain = make_train_step(loss_fn, DistributedNewtonConfig(), 4)
+    assert plain.wire_bits(params0) == {"uplink": 4 * 32 * 9,
+                                        "downlink": 32 * 9}
+    # two_round adds the full-precision gradient round (m uplink payloads
+    # + the averaged-gradient broadcast)
+    two = make_train_step(loss_fn, DistributedNewtonConfig(two_round=True), 4)
+    assert two.wire_bits(params0) == {"uplink": 2 * 4 * 32 * 9,
+                                      "downlink": 2 * 32 * 9}
 
 
 def test_train_step_compressed_trims_attacker(rng):
