@@ -1,59 +1,56 @@
-"""Figs. 1 & 2 — Byzantine experiments.
+"""Figs. 1 & 2 — Byzantine experiments, now an aggregator × attack grid.
 
 Fig. 1: robust-regression training loss; Fig. 2: logistic test accuracy —
-under the four §6 attacks at α ∈ {10%, 15%, 20%}, β = α + 2/m, m=20,
-M=10, η=1 (the paper's settings).
+under the four §6 attacks at α ∈ {10%, 15%, 20%}, m=20, M=10, η=1 (the
+paper's settings).  The paper's rule is ``norm_trim`` at β = α + 2/m;
+``aggregators`` sweeps the registry rules against every attack (the
+norm_trim-vs-krum-vs-trimmed_mean comparison), each scenario built
+through one :class:`repro.api.ExperimentSpec`.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.configs import PAPER_WORKLOADS
-from repro.core import AttackConfig, DistributedCubicNewton, NewtonConfig
-from repro.data import paper_dataset
-
-from .problems import accuracy, logistic_loss, robust_regression_loss
+from repro.api import ExperimentSpec
 
 ATTACKS = ("flipped_label", "negative", "gaussian", "random_label")
 ALPHAS = (0.10, 0.15, 0.20)
+# registry aggregators to pit against each attack; "norm_trim" is resolved
+# per-α to the paper's β = α + 2/m
+AGGREGATORS = ("norm_trim", "krum", "trimmed_mean")
 
 
-def run(T=15, datasets=("a9a", "w8a"), attacks=ATTACKS, alphas=ALPHAS, seed=0):
+def _aggregator_spec(agg: str, alpha: float, m: int) -> str:
+    """Per-α registry spec for a sweep entry (paper-faithful strengths)."""
+    if agg == "norm_trim":
+        return f"norm_trim:{alpha + 2.0 / m}"
+    if agg == "krum":
+        return f"krum:{int(alpha * m)}"
+    if agg == "trimmed_mean":
+        return f"trimmed_mean:{alpha + 1.0 / m}"
+    return agg   # "mean" / "coordinate_median" take no strength
+
+
+def run(T=15, datasets=("a9a", "w8a"), attacks=ATTACKS, alphas=ALPHAS,
+        aggregators=AGGREGATORS, seed=0):
     results = {}
+    m = 20  # paper's cluster size (fixed by the workloads)
     for ds in datasets:
         for attack in attacks:
             for alpha in alphas:
-                m = 20
-                beta = alpha + 2.0 / m
+                for agg in aggregators:
+                    spec = _aggregator_spec(agg, alpha, m)
+                    base = ExperimentSpec(
+                        problem=f"{ds}-logistic", M=10.0, eta=1.0,
+                        aggregator=spec, attack=attack, alpha=alpha,
+                        seed=seed,
+                    )
+                    # Fig. 2: logistic accuracy
+                    _, hist = base.build().run(T)
+                    key = f"{ds}/{attack}/alpha={alpha:g}/{agg}"
+                    results[f"fig2/{key}"] = {"accuracy": hist["eval"]}
 
-                # Fig. 2: logistic accuracy
-                wl = PAPER_WORKLOADS[f"{ds}-logistic"]
-                data = paper_dataset(wl, seed)
-                algo = DistributedCubicNewton(
-                    logistic_loss,
-                    NewtonConfig(M=10.0, eta=1.0, beta=beta),
-                    AttackConfig(name=attack, alpha=alpha),
-                )
-                w, hist = algo.run(
-                    jnp.zeros(wl.dim), data["X_workers"], data["y_workers"], T,
-                    eval_fn=lambda w, d=data: accuracy(w, d["X_test"], d["y_test"]),
-                )
-                results[f"fig2/{ds}/{attack}/alpha={alpha:g}"] = {
-                    "accuracy": hist["eval"]
-                }
-
-                # Fig. 1: robust-regression loss
-                wl = PAPER_WORKLOADS[f"{ds}-robust"]
-                data = paper_dataset(wl, seed)
-                algo = DistributedCubicNewton(
-                    robust_regression_loss,
-                    NewtonConfig(M=10.0, eta=1.0, beta=beta),
-                    AttackConfig(name=attack, alpha=alpha),
-                )
-                w, hist = algo.run(
-                    jnp.zeros(wl.dim), data["X_workers"], data["y_workers"], T
-                )
-                results[f"fig1/{ds}/{attack}/alpha={alpha:g}"] = {
-                    "loss": hist["loss"]
-                }
+                    # Fig. 1: robust-regression loss
+                    _, hist = base.replace(
+                        problem=f"{ds}-robust"
+                    ).build().run(T)
+                    results[f"fig1/{key}"] = {"loss": hist["loss"]}
     return results

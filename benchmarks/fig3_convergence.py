@@ -2,44 +2,30 @@
 
 Top row: logistic-regression test accuracy on the a9a/w8a twins for
 M ∈ {10, 15, 20}; bottom row: robust-regression training loss.
-Paper protocol: m=20 workers, η=1, λ=1.
+Paper protocol: m=20 workers, η=1, λ=1.  Every run builds through the
+:class:`repro.api.ExperimentSpec` facade.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.configs import PAPER_WORKLOADS
-from repro.core import DistributedCubicNewton, NewtonConfig
-from repro.data import paper_dataset
-
-from .problems import accuracy, logistic_loss, robust_regression_loss
+from repro.api import ExperimentSpec
 
 
 def run(T=15, datasets=("a9a", "w8a"), Ms=(10.0, 15.0, 20.0), seed=0):
     results = {}
     for ds in datasets:
         for M in Ms:
-            wl = PAPER_WORKLOADS[f"{ds}-logistic"]
-            data = paper_dataset(wl, seed)
-            algo = DistributedCubicNewton(
-                logistic_loss, NewtonConfig(M=M, eta=wl.eta, beta=0.0)
-            )
-            w, hist = algo.run(
-                jnp.zeros(wl.dim), data["X_workers"], data["y_workers"], T,
-                eval_fn=lambda w, d=data: accuracy(w, d["X_test"], d["y_test"]),
-            )
+            exp = ExperimentSpec(
+                problem=f"{ds}-logistic", M=M, aggregator="mean", seed=seed
+            ).build()
+            _, hist = exp.run(T)
             results[f"logistic/{ds}/M={M:g}"] = {
                 "accuracy": hist["eval"],
                 "loss": hist["loss"],
             }
 
-            wl = PAPER_WORKLOADS[f"{ds}-robust"]
-            data = paper_dataset(wl, seed)
-            algo = DistributedCubicNewton(
-                robust_regression_loss, NewtonConfig(M=M, eta=wl.eta, beta=0.0)
-            )
-            w, hist = algo.run(
-                jnp.zeros(wl.dim), data["X_workers"], data["y_workers"], T
-            )
+            exp = ExperimentSpec(
+                problem=f"{ds}-robust", M=M, aggregator="mean", seed=seed
+            ).build()
+            _, hist = exp.run(T)
             results[f"robustreg/{ds}/M={M:g}"] = {"loss": hist["loss"]}
     return results

@@ -1,19 +1,12 @@
-"""Shared problem definitions for the paper-experiment benchmarks (§6)."""
-import jax.numpy as jnp
+"""Shared problem definitions for the paper-experiment benchmarks (§6).
 
-
-def logistic_loss(w, X, y):
-    """Eq. (8): regularized logistic regression (λ/2n scaling as in paper)."""
-    z = X @ w
-    yy = 2.0 * y - 1.0
-    return jnp.mean(jnp.log1p(jnp.exp(-yy * z))) + 0.5 / X.shape[0] * (w @ w)
-
-
-def robust_regression_loss(w, X, y):
-    """Eq. (9): non-convex robust linear regression."""
-    r = y - X @ w
-    return jnp.mean(jnp.log(r * r / 2.0 + 1.0))
-
-
-def accuracy(w, X, y):
-    return float(((X @ w > 0) == (y > 0.5)).mean())
+The canonical loss functions moved to :mod:`repro.api.problems` (the
+experiment facade's problem catalog); this module re-exports them so
+older imports keep working.
+"""
+from repro.api.problems import (  # noqa: F401
+    accuracy,
+    factor_loss,
+    logistic_loss,
+    robust_regression_loss,
+)

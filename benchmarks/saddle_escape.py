@@ -12,23 +12,25 @@ minima at the top-r factors [BNS16, GJZ17 — the papers cited in §1].
 Compared: cubic Newton vs first-order robust GD, both starting next to the
 saddle; then cubic Newton under the SADDLE-POINT ATTACK (colluding Byzantine
 workers send updates pulling the iterate back toward U = 0 — the fake-local-
-minimum construction of §5).
+minimum construction of §5).  Every Newton arm builds through the
+:class:`repro.api.ExperimentSpec` facade; the problem itself comes from the
+catalog's ``matrix-factor`` entry (:mod:`repro.api.problems`).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    AttackConfig,
-    DistributedCubicNewton,
-    NewtonConfig,
-)
+from repro.api import ExperimentSpec, factor_loss
 from repro.core.aggregation import norm_trim
 
 
 def make_problem(key, d=10, r=2, n=400, m=10):
-    """Worker datasets: samples with a rank-r planted covariance."""
+    """Worker datasets: samples with a rank-r planted covariance.
+
+    (Kept for external callers/tests; the facade's ``matrix-factor``
+    problem builds the same construction from the experiment seed.)
+    """
     ku, kx = jax.random.split(key)
     U_star = jax.random.normal(ku, (d, r))
     X = jax.random.normal(kx, (m, n, r)) @ U_star.T  # (m, n, d) samples
@@ -36,42 +38,27 @@ def make_problem(key, d=10, r=2, n=400, m=10):
     return X, U_star
 
 
-def factor_loss(w, X, y):
-    """w = flat U (d·r).  y unused (kept for the framework's API)."""
-    del y
-    n, d = X.shape
-    r = w.shape[0] // d
-    U = w.reshape(d, r)
-    Sigma = X.T @ X / n
-    R = U @ U.T - Sigma
-    return 0.25 * jnp.sum(R * R)
-
-
 def min_hessian_eig(w, X):
-    d = X.shape[-1]
     H = jax.hessian(factor_loss)(w, X, None)
     return float(jnp.linalg.eigvalsh(H)[0])
 
 
 def run(T=25, d=10, r=2, m=10, seed=0):
-    key = jax.random.PRNGKey(seed)
-    X, U_star = make_problem(key, d=d, r=r, m=m)
-    y = jnp.zeros(X.shape[:2])
-    Xf = X.reshape(-1, d)
-    # start NEXT to the strict saddle U = 0
-    w0 = 1e-3 * jax.random.normal(jax.random.fold_in(key, 2), (d * r,))
-    f_star_gap = float(factor_loss(jnp.zeros(d * r), Xf, None))  # saddle value
+    base = ExperimentSpec(
+        problem=f"matrix-factor:{d}:{r}", m_workers=m, M=10.0, eta=1.0,
+        aggregator="norm_trim:0.1", seed=seed,
+    )
 
     out = {}
 
     # --- cubic Newton (ours) ---
-    newton = DistributedCubicNewton(
-        factor_loss, NewtonConfig(M=10.0, eta=1.0, beta=0.1)
-    )
-    _, h = newton.run(w0, X, y, T)
-    out["newton"] = {"loss": h["loss"], "saddle_value": f_star_gap}
+    exp = base.build()
+    prob = exp.problem   # one materialization; same seed ⇒ same data below
+    _, h = exp.run(T)
+    out["newton"] = {"loss": h["loss"], "saddle_value": prob.saddle_value}
 
-    # --- first-order robust GD baseline ---
+    # --- first-order robust GD baseline (same data, same start) ---
+    X, y, Xf, w0 = prob.X_workers, prob.y_workers, prob.X_full, prob.w0
     grad_fn = jax.jit(jax.vmap(jax.grad(factor_loss), in_axes=(None, 0, 0)))
     lossf = jax.jit(factor_loss)
     w = w0
@@ -83,12 +70,11 @@ def run(T=25, d=10, r=2, m=10, seed=0):
     out["gd"] = {"loss": gd_losses}
 
     # --- cubic Newton under the saddle-point attack ---
-    attacked = DistributedCubicNewton(
-        factor_loss,
-        NewtonConfig(M=10.0, eta=1.0, beta=0.2 + 2.0 / m),
-        AttackConfig(name="saddle", alpha=0.2),
-    )
-    _, h_atk = attacked.run(w0, X, y, T)
+    attacked = base.replace(
+        aggregator=f"norm_trim:{0.2 + 2.0 / m!r}", attack="saddle",
+        alpha=0.2,
+    ).build()
+    _, h_atk = attacked.run(T)
     out["newton_saddle_attack"] = {"loss": h_atk["loss"]}
 
     # curvature certificates at the final iterates

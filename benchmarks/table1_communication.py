@@ -19,19 +19,8 @@ until ‖∇f‖ ≤ ε?" the rounds-only Table 1 cannot answer.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.configs import PAPER_WORKLOADS
-from repro.core import (
-    AttackConfig,
-    ByzantinePGD,
-    DistributedCubicNewton,
-    NewtonConfig,
-    PGDConfig,
-)
-from repro.data import paper_dataset
-
-from .problems import robust_regression_loss
+from repro.api import ExperimentSpec, problem_dim, to_attack_config
+from repro.core import ByzantinePGD, PGDConfig
 
 ATTACKS = ("gaussian", "flipped_label", "negative", "random_label")
 
@@ -45,31 +34,26 @@ def _spec_name(spec):
 
 def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
         grad_tol=0.02, max_rounds=400, newton_budget=60, seed=0):
-    wl = PAPER_WORKLOADS[f"{dataset}-robust"]
-    data = paper_dataset(wl, seed)
-    m = wl.m_workers
-    d = wl.dim
-    w0 = jnp.zeros(wl.dim)
+    d = problem_dim(f"{dataset}-robust")
+    m = 20  # the paper workloads partition over 20 machines
     rows = []
 
     def one(attack, alpha):
         beta = alpha + 2.0 / m if alpha > 0 else 0.1
-        newton = DistributedCubicNewton(
-            robust_regression_loss,
-            NewtonConfig(M=10.0, eta=1.0, beta=beta),
-            AttackConfig(name=attack, alpha=alpha),
-        )
-        _, h_n = newton.run(
-            w0, data["X_workers"], data["y_workers"], newton_budget,
-            grad_tol=grad_tol,
-        )
+        exp = ExperimentSpec(
+            problem=f"{dataset}-robust", M=10.0, eta=1.0,
+            aggregator=f"norm_trim:{beta!r}", attack=attack, alpha=alpha,
+            seed=seed,
+        ).build()
+        _, h_n = exp.run(newton_budget, grad_tol=grad_tol)
+        data, w0 = exp.problem, exp.problem.w0
         pgd = ByzantinePGD(
-            robust_regression_loss,
+            exp.problem.loss_fn,
             PGDConfig(lr=1.0, R=10, r=5.0, Q=10, T_th=10, trim_frac=max(alpha, 0.1)),
-            AttackConfig(name=attack, alpha=alpha),
+            to_attack_config(attack, alpha),
         )
         _, h_p = pgd.run(
-            w0, data["X_workers"], data["y_workers"],
+            w0, data.X_workers, data.y_workers,
             max_rounds=max_rounds, grad_tol=grad_tol,
         )
         # PGD ships one full-precision d-gradient per worker per round
@@ -115,23 +99,18 @@ def run_compression(dataset="w8a", compressors=COMPRESSOR_SWEEP,
     the uncompressed round count on w8a-robust at ≥4.7× fewer uplink
     bits.
     """
-    wl = PAPER_WORKLOADS[f"{dataset}-robust"]
-    data = paper_dataset(wl, seed)
-    m, d = wl.m_workers, wl.dim
-    w0 = jnp.zeros(d)
+    d = problem_dim(f"{dataset}-robust")
+    m = 20  # the paper workloads partition over 20 machines
     beta = alpha + 2.0 / m if alpha > 0 else 0.1
     rows = []
     for spec in compressors:
-        newton = DistributedCubicNewton(
-            robust_regression_loss,
-            NewtonConfig(M=10.0, eta=1.0, beta=beta, compressor=spec,
-                         downlink_compressor=downlink),
-            AttackConfig(name=attack, alpha=alpha),
-        )
-        _, h = newton.run(
-            w0, data["X_workers"], data["y_workers"], newton_budget,
-            grad_tol=grad_tol,
-        )
+        exp = ExperimentSpec(
+            problem=f"{dataset}-robust", M=10.0, eta=1.0,
+            aggregator=f"norm_trim:{beta!r}", attack=attack, alpha=alpha,
+            compressor=spec, downlink_compressor=downlink, seed=seed,
+        ).build()
+        _, h = exp.run(newton_budget, grad_tol=grad_tol)
+        newton = exp.algo
         bps = newton.bits_per_step()
         comp = newton.uplink.compressor
         rows.append({
@@ -178,19 +157,14 @@ def run_bits_to_eps(dataset="a9a", compressors=COMPRESSOR_SWEEP,
     reached ε) — the x axis is the per-step ``bits_cumulative`` ledger
     series, so adaptive-k runs report their true varying per-step cost.
     """
-    wl = PAPER_WORKLOADS[f"{dataset}-robust"]
-    data = paper_dataset(wl, seed)
-    w0 = jnp.zeros(wl.dim)
     rows = []
     for spec in compressors:
-        newton = DistributedCubicNewton(
-            robust_regression_loss,
-            NewtonConfig(M=10.0, eta=1.0, beta=0.1, compressor=spec,
-                         downlink_compressor=downlink),
-        )
-        _, h = newton.run(
-            w0, data["X_workers"], data["y_workers"], newton_budget,
-        )
+        exp = ExperimentSpec(
+            problem=f"{dataset}-robust", M=10.0, eta=1.0,
+            aggregator="norm_trim:0.1", compressor=spec,
+            downlink_compressor=downlink, seed=seed,
+        ).build()
+        _, h = exp.run(newton_budget)
         bits_at_eps = {}
         for eps in eps_grid:
             hit = next(

@@ -19,16 +19,7 @@ Flags demonstrate the full channel layer on total wire (up + down):
 """
 import argparse
 
-import jax.numpy as jnp
-
-from repro.configs import PAPER_WORKLOADS
-from repro.core import AttackConfig, DistributedCubicNewton, NewtonConfig
-from repro.data import paper_dataset
-
-
-def robust_regression_loss(w, X, y):
-    r = y - X @ w
-    return jnp.mean(jnp.log(r * r / 2.0 + 1.0))
+from repro.api import ExperimentSpec, problem_dim
 
 
 def main(argv=None):
@@ -44,19 +35,19 @@ def main(argv=None):
                     help="Byzantine fraction (gaussian attack)")
     args = ap.parse_args(argv)
 
-    wl = PAPER_WORKLOADS[f"{args.dataset}-robust"]
-    data = paper_dataset(wl, seed=0)
-    m, d = wl.m_workers, wl.dim
-    w0 = jnp.zeros(d)
+    problem = f"{args.dataset}-robust"
+    m, d = 20, problem_dim(problem)
     beta = args.alpha + 2.0 / m if args.alpha > 0 else 0.1
-    attack = AttackConfig(name="gaussian" if args.alpha > 0 else "none",
-                          alpha=args.alpha)
+    base = ExperimentSpec(
+        problem=problem, aggregator=f"norm_trim:{beta!r}",
+        attack="gaussian" if args.alpha > 0 else "none", alpha=args.alpha,
+    )
 
     specs = [None, "topk:0.1", "randk:0.1", "signnorm", "int8"]
     if args.adaptive_k:
         specs.append("adaptive_topk:0.05:0.5")
 
-    print(f"# {wl.name}: m={m} d={d} downlink={args.downlink or 'fp32'} "
+    print(f"# {problem}: m={m} d={d} downlink={args.downlink or 'fp32'} "
           f"attack=gaussian@{args.alpha}")
     print(f"{'uplink':>22s} {'rounds':>6s} {'up_bits':>12s} {'down_bits':>10s} "
           f"{'total_bits':>12s} {'saving':>7s} {'grad_norm':>9s}")
@@ -65,22 +56,15 @@ def main(argv=None):
         # the baseline row stays fully uncompressed (fp32 broadcast), so
         # the saving column shows the DOWNLINK's contribution too
         downlink = args.downlink if spec is not None else None
-        algo = DistributedCubicNewton(
-            robust_regression_loss,
-            NewtonConfig(M=wl.M, eta=wl.eta, beta=beta, compressor=spec,
-                         downlink_compressor=downlink),
-            attack,
-        )
-        _, hist = algo.run(
-            w0, data["X_workers"], data["y_workers"], n_steps=args.steps,
-            grad_tol=args.grad_tol,
-        )
+        exp = base.replace(compressor=spec,
+                           downlink_compressor=downlink).build()
+        _, hist = exp.run(args.steps, grad_tol=args.grad_tol)
         if base_total is None:
             base_total = hist["total_bits"]
         saving = base_total / max(hist["total_bits"], 1)
         name = spec or "none"
         if args.adaptive_k and spec and spec.startswith("adaptive"):
-            name += f"(k→{algo.uplink.compressor.k})"
+            name += f"(k→{exp.algo.uplink.compressor.k})"
         print(f"{name:>22s} {hist['rounds']:>6d} {hist['uplink_bits']:>12d} "
               f"{hist['downlink_bits']:>10d} {hist['total_bits']:>12d} "
               f"{saving:>6.1f}x {hist['grad_norm'][-1]:>9.4f}")

@@ -1,39 +1,33 @@
-"""Quickstart: Byzantine-robust distributed cubic-regularized Newton in ~40
-lines — Algorithm 1 on a synthetic logistic-regression problem split over
-20 workers, 20% of which mount a Gaussian attack.
+"""Quickstart: Byzantine-robust distributed cubic-regularized Newton in a
+dozen lines — one declarative :class:`repro.api.ExperimentSpec` describing
+Algorithm 1 on a synthetic logistic-regression problem split over 20
+workers, 20% of which mount a Gaussian attack.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
-
-from repro.core import AttackConfig, DistributedCubicNewton, NewtonConfig
-from repro.data import make_classification, shard_to_workers
-
-
-def logistic_loss(w, X, y):
-    z = X @ w
-    yy = 2.0 * y - 1.0
-    return jnp.mean(jnp.log1p(jnp.exp(-yy * z))) + 1e-3 * w @ w
+from repro.api import ExperimentSpec
 
 
 def main():
     m, alpha = 20, 0.2
-    X, y, _ = make_classification(jax.random.PRNGKey(0), 8000, 60, margin=3.0)
-    Xw, yw = shard_to_workers(X, y, m)
-
-    algo = DistributedCubicNewton(
-        logistic_loss,
+    spec = ExperimentSpec(
+        problem="synthetic-logistic:8000:60",
+        m_workers=m,
+        M=10.0,
+        eta=1.0,
         # β > α: trim a bit more than the Byzantine fraction (paper: α + 2/m)
-        NewtonConfig(M=10.0, eta=1.0, beta=alpha + 2.0 / m),
-        AttackConfig(name="gaussian", alpha=alpha, sigma=50.0),
+        aggregator=f"norm_trim:{alpha + 2.0 / m}",
+        attack="gaussian:50.0",
+        alpha=alpha,
     )
-    w, hist = algo.run(jnp.zeros(60), Xw, yw, n_steps=12)
+    exp = spec.build()
+    w, hist = exp.run(n_steps=12)
 
-    acc = float(((X @ w > 0) == (y > 0.5)).mean())
+    acc = exp.problem.accuracy(w)
     print(f"rounds={hist['rounds']}  final_loss={hist['loss'][-1]:.4f}  "
           f"grad_norm={hist['grad_norm'][-1]:.4f}  train_acc={acc:.3f}")
     print("loss path:", " ".join(f"{l:.3f}" for l in hist["loss"]))
+    print("spec:", spec.to_json())
     assert acc > 0.85, "robust Newton should shrug off 20% Byzantine workers"
 
 

@@ -31,7 +31,8 @@ def main():
         seq_len=args.seq_len,
         attack=args.attack,
         alpha=args.alpha,
-        beta=max(args.alpha, 0.25),
+        # β > α (build-time validated): trim strictly more than corrupted
+        beta=max(args.alpha + 1.0 / args.m_workers, 0.25),
         solver_iters=2,
         ckpt_dir="results/train_lm_ckpt",
     )

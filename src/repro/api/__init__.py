@@ -1,0 +1,74 @@
+"""`repro.api` — the declarative experiment facade.
+
+Three spec-string registries (mirroring
+:mod:`repro.compression.registry`) plus one serializable record tie the
+whole system together:
+
+* :mod:`repro.api.aggregators` — ``"norm_trim:0.25"``, ``"krum:2"``,
+  ``"trimmed_mean:0.1"``, ``"coordinate_median"``, ``"mean"`` → a
+  resolved :class:`Aggregator` both runtimes call at the center;
+* :mod:`repro.api.attacks` — ``"gaussian:10.0"``, ``"saddle:5.0"``,
+  ``"negative:0.9"``, ``"flipped_label"``, … → a :class:`ResolvedAttack`
+  owning the Byzantine mask, channel hooks, and label corruption;
+* :mod:`repro.api.problems` — ``"w8a-robust"``,
+  ``"synthetic-logistic:<n>:<d>"``, ``"matrix-factor:<d>:<r>"``, … →
+  worker-sharded data + the canonical loss functions;
+* :mod:`repro.api.experiment` — :class:`ExperimentSpec`, the frozen
+  JSON-round-trippable record every entry point builds through, with
+  build-time validation (:class:`SpecError`) and a ``build()`` →
+  :class:`Experiment` runner over both runtimes.
+
+The registries resolve specs ONCE at build time — nothing here runs
+inside a trace.
+"""
+from .aggregators import (
+    AGGREGATOR_SPECS,
+    Aggregator,
+    default_aggregator_spec,
+    make_aggregator,
+)
+from .attacks import (
+    ATTACK_SPECS,
+    ResolvedAttack,
+    make_attack,
+    resolve_attack,
+    to_attack_config,
+)
+from .errors import SpecError
+from .experiment import KERNEL_TILE_MAX_D, Experiment, ExperimentSpec
+from .problems import (
+    PROBLEM_SPECS,
+    Problem,
+    accuracy,
+    factor_loss,
+    fixed_workers,
+    logistic_loss,
+    make_problem,
+    problem_dim,
+    robust_regression_loss,
+)
+
+__all__ = [
+    "AGGREGATOR_SPECS",
+    "ATTACK_SPECS",
+    "Aggregator",
+    "Experiment",
+    "ExperimentSpec",
+    "KERNEL_TILE_MAX_D",
+    "PROBLEM_SPECS",
+    "Problem",
+    "ResolvedAttack",
+    "SpecError",
+    "accuracy",
+    "default_aggregator_spec",
+    "factor_loss",
+    "fixed_workers",
+    "logistic_loss",
+    "make_aggregator",
+    "make_attack",
+    "make_problem",
+    "problem_dim",
+    "resolve_attack",
+    "robust_regression_loss",
+    "to_attack_config",
+]

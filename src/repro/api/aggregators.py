@@ -1,0 +1,242 @@
+"""Aggregator registry: spec strings → resolved :class:`Aggregator`.
+
+Mirrors :mod:`repro.compression.registry` for the center's robust
+aggregation rule (Algorithm 1, step 6, and its baselines):
+
+    "mean"                  plain average (non-robust reference)
+    "norm_trim:0.25"        paper's rule — drop the β·m largest-norm
+                            updates, average the rest (β ∈ (0, 1))
+    "krum:2"                Krum [BMGS17] assuming n_byz Byzantine workers
+    "trimmed_mean:0.1"      coordinate-wise trimmed mean (ByzantinePGD's
+                            default), trim_frac per side
+    "coordinate_median"     coordinate-wise median
+
+``make_aggregator(spec)`` resolves the string ONCE (never inside a
+trace); the returned object serves BOTH runtimes:
+
+* ``agg(updates)``           — flat ``(m, d)`` stacked vectors (the
+  paper-faithful runtime) → ``(aggregate, keep_mask)``;
+* ``agg.tree(updates_tree)`` — worker-stacked pytree (the mesh runtime,
+  every leaf ``(m, …)``) → ``(aggregate_tree, keep_mask)``.
+
+``keep_mask`` is an ``(m,)`` float mask of the workers whose update
+contributed (all-ones for the coordinate-wise rules, one-hot for krum) —
+the metric both runtimes already expose.  ``check_resilience(alpha, m)``
+returns None when the rule provably tolerates a Byzantine fraction α at
+cluster size m, else the reason it does not —
+:meth:`ExperimentSpec.validate` turns that into a build-time
+:class:`SpecError`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import aggregation as _agg
+from .errors import SpecError
+
+AGGREGATOR_SPECS = ("mean", "norm_trim:<beta>", "krum:<n_byz>",
+                    "trimmed_mean:<frac>", "coordinate_median")
+
+
+class Aggregator:
+    """A resolved aggregation rule, usable from both runtimes."""
+
+    spec: str
+    name: str
+
+    def __call__(self, updates):
+        """(m, d) stacked updates → (aggregate (d,), keep mask (m,))."""
+        raise NotImplementedError
+
+    def tree(self, updates_tree):
+        """Worker-stacked pytree → (aggregate tree, keep mask (m,))."""
+        raise NotImplementedError
+
+    def check_resilience(self, alpha: float, m: int):
+        """None when the rule tolerates Byzantine fraction ``alpha`` at
+        cluster size ``m``; otherwise the reason + fix (a build error)."""
+        return None
+
+    @staticmethod
+    def _m(updates_tree) -> int:
+        return jax.tree_util.tree_leaves(updates_tree)[0].shape[0]
+
+    @staticmethod
+    def _ones(m, dtype=jnp.float32):
+        return jnp.ones((m,), dtype)
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.spec!r})"
+
+
+class Mean(Aggregator):
+    """Plain average — the non-robust contrast the paper draws."""
+
+    def __init__(self):
+        self.spec = self.name = "mean"
+
+    def __call__(self, updates):
+        return updates.mean(0), self._ones(updates.shape[0], updates.dtype)
+
+    def tree(self, updates_tree):
+        m = self._m(updates_tree)
+        return _agg.mean_tree(updates_tree), self._ones(m)
+
+    def check_resilience(self, alpha, m):
+        return (f"'mean' has no Byzantine tolerance — it is the "
+                f"deliberate non-robust baseline")
+
+
+class NormTrim(Aggregator):
+    """Paper's norm-based thresholding; resilient for α < β."""
+
+    def __init__(self, beta: float):
+        if not 0.0 < beta < 1.0:
+            raise SpecError(
+                f"norm_trim needs a trim fraction β in (0, 1), got {beta!r}; "
+                f"use e.g. 'norm_trim:0.25' (β = 0 is just 'mean')"
+            )
+        self.beta = float(beta)
+        self.spec = f"norm_trim:{self.beta!r}"
+        self.name = "norm_trim"
+
+    def __call__(self, updates):
+        return _agg.norm_trim(updates, self.beta)
+
+    def tree(self, updates_tree):
+        return _agg.norm_trim_tree(updates_tree, self.beta)
+
+    def check_resilience(self, alpha, m):
+        # β > α precondition: strictly more must be trimmed than corrupted
+        if self.beta <= alpha:
+            return (f"norm_trim β={self.beta!r} ≤ α={alpha!r}: the "
+                    f"resilience precondition needs β > α — raise β (the "
+                    f"paper uses β = α + 2/m = {alpha + 2 / m:.4g})")
+        return None
+
+
+class Krum(Aggregator):
+    """Krum [BMGS17]: forward the single most-central update."""
+
+    def __init__(self, n_byz: int):
+        if n_byz < 0:
+            raise SpecError(f"krum needs n_byz ≥ 0, got {n_byz}")
+        self.n_byz = int(n_byz)
+        self.spec = f"krum:{self.n_byz}"
+        self.name = "krum"
+
+    def __call__(self, updates):
+        m = updates.shape[0]
+        j = _agg.krum_select(
+            updates.reshape(m, -1).astype(jnp.float32), self.n_byz
+        )
+        keep = (jnp.arange(m) == j).astype(updates.dtype)
+        return updates[j], keep
+
+    def tree(self, updates_tree):
+        m = self._m(updates_tree)
+        agg, j = _agg.krum_tree(updates_tree, self.n_byz)
+        return agg, (jnp.arange(m) == j).astype(jnp.float32)
+
+    def check_resilience(self, alpha, m):
+        f = int(alpha * m)  # byzantine_mask's worker count
+        if self.n_byz < f:
+            return (f"krum:{self.n_byz} assumes fewer Byzantine workers "
+                    f"than α={alpha!r} implies at m={m} — raise n_byz "
+                    f"to ≥ {f}")
+        if m < 2 * self.n_byz + 3:
+            return (f"krum needs m ≥ 2·n_byz + 3 = {2 * self.n_byz + 3} "
+                    f"workers to score n_byz={self.n_byz}, got m={m}")
+        return None
+
+
+class TrimmedMean(Aggregator):
+    """Coordinate-wise trimmed mean (ByzantinePGD's default)."""
+
+    def __init__(self, trim_frac: float):
+        if not 0.0 < trim_frac < 0.5:
+            raise SpecError(
+                f"trimmed_mean needs a per-side trim fraction in (0, 0.5), "
+                f"got {trim_frac!r}; use e.g. 'trimmed_mean:0.1'"
+            )
+        self.trim_frac = float(trim_frac)
+        self.spec = f"trimmed_mean:{self.trim_frac!r}"
+        self.name = "trimmed_mean"
+
+    def __call__(self, updates):
+        agg = _agg.trimmed_mean(updates, self.trim_frac)
+        return agg, self._ones(updates.shape[0], updates.dtype)
+
+    def tree(self, updates_tree):
+        m = self._m(updates_tree)
+        return _agg.trimmed_mean_tree(updates_tree, self.trim_frac), self._ones(m)
+
+    def check_resilience(self, alpha, m):
+        # per-coordinate: the k = round(trim_frac·m) values cut per side
+        # must cover every corrupted worker
+        k = min(int(round(self.trim_frac * m)), (m - 1) // 2)
+        f = int(alpha * m)
+        if k < f:
+            return (f"trimmed_mean:{self.trim_frac!r} cuts {k}/side at "
+                    f"m={m} but α={alpha!r} corrupts {f} workers — raise "
+                    f"the trim fraction to ≥ {f / m:.4g}")
+        return None
+
+
+class CoordinateMedian(Aggregator):
+    """Coordinate-wise median; resilient up to α < 1/2."""
+
+    def __init__(self):
+        self.spec = self.name = "coordinate_median"
+
+    def __call__(self, updates):
+        agg = _agg.coordinate_median(updates)
+        return agg, self._ones(updates.shape[0], updates.dtype)
+
+    def tree(self, updates_tree):
+        m = self._m(updates_tree)
+        return _agg.coordinate_median_tree(updates_tree), self._ones(m)
+
+    def check_resilience(self, alpha, m):
+        if int(alpha * m) > (m - 1) // 2:
+            return (f"coordinate_median needs an honest majority: "
+                    f"α={alpha!r} corrupts {int(alpha * m)} of m={m}")
+        return None
+
+
+def _num(head: str, arg: str, cast, what: str):
+    try:
+        return cast(arg)
+    except ValueError:
+        raise SpecError(
+            f"aggregator spec {head!r} takes {what}, got {arg!r}"
+        ) from None
+
+
+def make_aggregator(spec) -> Aggregator:
+    """Resolve a spec string (or pass through an Aggregator instance)."""
+    if isinstance(spec, Aggregator):
+        return spec
+    if not isinstance(spec, str):
+        raise SpecError(f"aggregator spec must be a string, got {spec!r}")
+    head, _, arg = spec.partition(":")
+    if head == "mean":
+        return Mean()
+    if head == "norm_trim":
+        return NormTrim(_num(head, arg or "0.2", float, "a β fraction"))
+    if head == "krum":
+        return Krum(_num(head, arg or "2", int, "an integer n_byz"))
+    if head == "trimmed_mean":
+        return TrimmedMean(_num(head, arg or "0.2", float, "a trim fraction"))
+    if head == "coordinate_median":
+        return CoordinateMedian()
+    raise SpecError(
+        f"unknown aggregator spec {spec!r}; expected one of {AGGREGATOR_SPECS}"
+    )
+
+
+def default_aggregator_spec(beta: float) -> str:
+    """The legacy β-field behaviour as a spec: norm_trim(β) when β > 0,
+    plain mean otherwise (what both runtimes hardcoded before)."""
+    return f"norm_trim:{float(beta)!r}" if beta > 0 else "mean"

@@ -1,0 +1,173 @@
+"""Attack registry: spec strings → resolved :class:`ResolvedAttack`.
+
+Unifies the free functions of :mod:`repro.core.attacks` behind the same
+spec-string pattern as the compressor and aggregator registries:
+
+    "none"                no corruption
+    "gaussian:10.0"       s_i + N(0, σ²) on Byzantine updates
+    "negative:0.9"        −c · s_i  (norm-preserving sign flip)
+    "saddle:5.0"          colluding fake descent direction toward a
+                          saddle (scale · random unit vector)
+    "random_label"        Byzantine workers train on random labels
+    "flipped_label"       … on flipped labels ("flip" is an alias)
+
+``make_attack(spec, alpha)`` resolves the string ONCE.  The resolved
+object owns the Byzantine mask, the channel injection hooks for both
+runtime layouts, and the label-corruption entry point, so neither
+runtime dispatches on name strings any more:
+
+* ``update_hook(m)`` — ``(key, (m, d) stacked) → corrupted`` for a
+  :class:`~repro.comm.VectorChannel` (None for label/none attacks);
+* ``tree_hook(m)``   — same over a worker-stacked pytree for a
+  :class:`~repro.comm.TreeChannel`;
+* ``corrupt_labels(key, y)`` — data-level corruption before the local
+  solve (label attacks only).
+
+``to_attack_config`` bridges to the legacy frozen
+:class:`~repro.core.newton.AttackConfig` for call sites that still pass
+one through (``ByzantinePGD``); ``resolve_attack`` goes the other way.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from ..core import attacks as attacks_lib
+from .errors import SpecError
+
+# head → (family, scale-parameter name, default scale)
+_UPDATE = {
+    "gaussian": ("sigma", 10.0),
+    "negative": ("c", 0.9),
+    "saddle": ("scale", 5.0),
+}
+_LABEL = ("random_label", "flipped_label")
+_ALIASES = {"flip": "flipped_label", "label_flip": "flipped_label"}
+
+ATTACK_SPECS = ("none", "gaussian:<sigma>", "negative:<c>", "saddle:<scale>",
+                "random_label", "flipped_label")
+
+
+class ResolvedAttack:
+    """One attack scenario: rule + strength + Byzantine fraction."""
+
+    def __init__(self, name: str, alpha: float, *,
+                 param: Optional[float] = None, num_classes: int = 2):
+        self.name = name
+        self.alpha = float(alpha)
+        self.num_classes = int(num_classes)
+        if name == "none" or self.alpha <= 0:
+            self.kind = "none"
+            self.kwargs: dict = {}
+            self.spec = "none"
+            return
+        if name in _UPDATE:
+            self.kind = "update"
+            pname, default = _UPDATE[name]
+            value = default if param is None else float(param)
+            self.kwargs = {pname: value}
+            self.spec = f"{name}:{value!r}"
+        elif name in _LABEL:
+            self.kind = "label"
+            self.kwargs = {"num_classes": self.num_classes}
+            self.spec = name
+        else:
+            raise SpecError(
+                f"unknown attack {name!r}; expected one of {ATTACK_SPECS}"
+            )
+
+    # -- mask + hooks ----------------------------------------------------
+    def mask(self, m: int):
+        return attacks_lib.byzantine_mask(m, self.alpha)
+
+    def update_hook(self, m: int) -> Optional[Callable]:
+        """Channel injection hook over (m, d) stacked vectors."""
+        if self.kind != "update":
+            return None
+        fn = attacks_lib.UPDATE_ATTACKS[self.name]
+        mask = self.mask(m)
+        kw = self.kwargs
+
+        def hook(key, s):
+            return fn(key, s, mask, **kw)
+
+        return hook
+
+    def tree_hook(self, m: int) -> Optional[Callable]:
+        """Channel injection hook over a worker-stacked pytree."""
+        if self.kind != "update":
+            return None
+        fn = attacks_lib.UPDATE_ATTACKS[self.name]
+        mask = self.mask(m)
+        kw = self.kwargs
+
+        def hook(key, tree):
+            return jax.tree_util.tree_map(
+                lambda x: fn(key, x, mask, **kw), tree
+            )
+
+        return hook
+
+    def corrupt_labels(self, key, y):
+        """Data-level corruption of the (m, n) label block (no-op unless
+        this is a label attack)."""
+        if self.kind != "label":
+            return y
+        return attacks_lib.LABEL_ATTACKS[self.name](
+            key, y, self.mask(y.shape[0]), num_classes=self.num_classes
+        )
+
+    def __repr__(self):
+        return f"ResolvedAttack({self.spec!r}, alpha={self.alpha!r})"
+
+
+def make_attack(spec, alpha: float = 0.0, *,
+                num_classes: int = 2) -> ResolvedAttack:
+    """Resolve an attack spec string at the given Byzantine fraction α."""
+    if isinstance(spec, ResolvedAttack):
+        return spec
+    if spec is None:
+        spec = "none"
+    if not isinstance(spec, str):
+        raise SpecError(f"attack spec must be a string, got {spec!r}")
+    head, _, arg = spec.partition(":")
+    head = _ALIASES.get(head, head)
+    if head != "none" and head not in _UPDATE and head not in _LABEL:
+        raise SpecError(
+            f"unknown attack spec {spec!r}; expected one of {ATTACK_SPECS}"
+        )
+    if arg and head not in _UPDATE:
+        raise SpecError(f"attack {head!r} takes no parameter, got {spec!r}")
+    param = None
+    if arg:
+        try:
+            param = float(arg)
+        except ValueError:
+            raise SpecError(
+                f"attack spec {spec!r}: parameter must be a number"
+            ) from None
+    return ResolvedAttack(head, alpha, param=param, num_classes=num_classes)
+
+
+def resolve_attack(cfg) -> ResolvedAttack:
+    """Legacy bridge: an :class:`~repro.core.newton.AttackConfig` (name +
+    per-attack fields) → the resolved form the runtimes consume."""
+    param = {"gaussian": cfg.sigma, "negative": cfg.c,
+             "saddle": getattr(cfg, "scale", None)}.get(cfg.name)
+    return ResolvedAttack(cfg.name, cfg.alpha, param=param,
+                          num_classes=cfg.num_classes)
+
+
+def to_attack_config(spec, alpha: float = 0.0, *, num_classes: int = 2):
+    """Spec string → legacy :class:`~repro.core.newton.AttackConfig`
+    (the form :class:`~repro.core.ByzantinePGD` still takes)."""
+    make_attack(spec, alpha, num_classes=num_classes)  # validate grammar
+    from ..core.newton import AttackConfig  # runtime import: no cycle
+
+    head, _, arg = (spec or "none").partition(":")
+    head = _ALIASES.get(head, head)
+    kw = {}
+    if arg and head in _UPDATE:
+        kw[_UPDATE[head][0]] = float(arg)
+    return AttackConfig(name=head, alpha=alpha, num_classes=num_classes, **kw)

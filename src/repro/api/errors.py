@@ -1,0 +1,13 @@
+"""Build-time validation errors for the experiment facade.
+
+Every mis-specification surfaces *before* anything traces or allocates,
+as a :class:`SpecError` whose message names the offending field, the
+offending value, and the fix — the actionable-messages contract of the
+``repro.api`` layer.
+"""
+from __future__ import annotations
+
+
+class SpecError(ValueError):
+    """A spec string or :class:`~repro.api.ExperimentSpec` field is
+    invalid; the message says which one and how to fix it."""

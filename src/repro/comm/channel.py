@@ -49,6 +49,21 @@ def _tree_size(tree) -> int:
     return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
 
 
+def _measured_delta(sent, received):
+    """Achieved contraction δ̂ = 1 − ‖x − C(x)‖²/‖x‖² over all senders'
+    payloads (pytrees or arrays) — the per-round norm ratio the adaptive
+    schedule consumes.  1 where nothing was sent (zero signal)."""
+    num = 0.0
+    den = 0.0
+    for x, r in zip(jax.tree_util.tree_leaves(sent),
+                    jax.tree_util.tree_leaves(received)):
+        x32 = x.astype(jnp.float32)
+        r32 = r.astype(jnp.float32)
+        num = num + jnp.sum((x32 - r32) ** 2)
+        den = den + jnp.sum(x32 * x32)
+    return jnp.where(den > 0, 1.0 - num / jnp.maximum(den, 1e-30), 1.0)
+
+
 class Channel:
     """Shared direction/feedback bookkeeping for both layouts."""
 
@@ -102,10 +117,15 @@ class VectorChannel(Channel):
         return jnp.zeros(shape, jnp.float32)
 
     # -- the wire -------------------------------------------------------
-    def transmit(self, x, state, *, key=None, attack_key=None):
+    def transmit(self, x, state, *, key=None, attack_key=None,
+                 measure: bool = False):
         """One round: compress/EF every sender's vector, reconstruct at
-        the receiver, inject Byzantine payloads.  Returns ``(x̂, state')``.
+        the receiver, inject Byzantine payloads.  Returns ``(x̂, state')``
+        — or ``(x̂, state', δ̂)`` with ``measure=True``, where δ̂ is the
+        achieved contraction measured BEFORE Byzantine injection (so the
+        adaptive schedule sees the compressor, not the attacker).
         """
+        x_sent = x
         comp, fb = self.compressor, self.feedback
         if comp is not None:
             if self.n_senders > 1:
@@ -124,8 +144,11 @@ class VectorChannel(Channel):
                     x, state = fb.apply(x, state, key=key)
                 else:
                     x = comp.roundtrip(x, key=key)
+        delta = _measured_delta(x_sent, x) if measure else None
         if self.attack_hook is not None and attack_key is not None:
             x = self.attack_hook(attack_key, x)
+        if measure:
+            return x, state, delta
         return x, state
 
     # -- accounting -----------------------------------------------------
@@ -192,7 +215,11 @@ class TreeChannel(Channel):
         )
 
     # -- the wire -------------------------------------------------------
-    def transmit(self, tree, state, *, key=None, attack_key=None):
+    def transmit(self, tree, state, *, key=None, attack_key=None,
+                 measure: bool = False):
+        """Like :meth:`VectorChannel.transmit`, over pytrees; with
+        ``measure=True`` also returns the pre-attack achieved δ̂."""
+        tree_sent = tree
         tc = self.tree_compressor
         if tc is not None:
             # a stateful channel's init_state is never empty, so the None
@@ -205,8 +232,11 @@ class TreeChannel(Channel):
             else:
                 tree = tc.roundtrip_tree(tree, key)
             tree = self.constrain(tree)
+        delta = _measured_delta(tree_sent, tree) if measure else None
         if self.attack_hook is not None and attack_key is not None:
             tree = self.constrain(self.attack_hook(attack_key, tree))
+        if measure:
+            return tree, state, delta
         return tree, state
 
     def _feedback_roundtrip(self, tree, state, key):

@@ -9,6 +9,11 @@ see ``DistributedCubicNewton.run``).
 Policy (the ROADMAP's "grow/shrink with the measured δ or the
 gradient-norm plateau"):
 
+* **measured δ̂ below target ⇒ grow immediately** — the channel reports
+  its achieved per-round contraction (one norm ratio, see
+  ``Channel.transmit(measure=True)``); δ̂ < ``delta_target`` means the
+  wire is starving the iterate *right now*, so k doubles toward
+  ``k_max`` without waiting out the plateau window.
 * **plateau ⇒ grow** — if the gradient norm improved by less than
   ``plateau_tol`` (relative) over the last ``patience`` steps, the
   compression error is what is stalling progress (near saddles the true
@@ -16,8 +21,8 @@ gradient-norm plateau"):
   ``k_max``.
 * **fast progress ⇒ shrink** — if the iterate is moving well (relative
   improvement above ``shrink_tol`` over the window) *and* the measured δ
-  comfortably exceeds the k_min guarantee, halve k back toward
-  ``k_min``: the cheap payload was already enough.
+  comfortably exceeds the target, halve k back toward ``k_min``: the
+  cheap payload was already enough.
 
 ``schedule_update`` returns True when k changed, which is the caller's
 signal to rebuild its jitted step.  ``wire_bits`` always reflects the
@@ -58,6 +63,15 @@ class AdaptiveTopK(TopK):
         old_k = self.k
         if grad_norm is not None:
             self._grad_norms.append(float(grad_norm))
+        # δ-targeted control: the channel's measured contraction fell below
+        # the target — grow NOW (no patience window; the wire is the
+        # bottleneck this very round).
+        if (measured_delta is not None
+                and measured_delta < self.delta_target
+                and self.k < self.k_max):
+            self.k = min(self.k_max, 2 * self.k)
+            self._grad_norms.clear()
+            return True
         if len(self._grad_norms) == self._grad_norms.maxlen:
             first, last = self._grad_norms[0], self._grad_norms[-1]
             rel = (first - last) / max(first, 1e-30)

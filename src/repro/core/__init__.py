@@ -20,11 +20,15 @@ from :func:`make_stateful_train_step`.
 from .aggregation import (
     AGGREGATORS,
     coordinate_median,
+    coordinate_median_tree,
     krum,
+    krum_tree,
     mean,
+    mean_tree,
     norm_trim,
     norm_trim_tree,
     trimmed_mean,
+    trimmed_mean_tree,
 )
 from .attacks import ALL_ATTACKS, LABEL_ATTACKS, UPDATE_ATTACKS, byzantine_mask
 from .byzantine_pgd import ByzantinePGD, PGDConfig
@@ -61,16 +65,20 @@ __all__ = [
     "build_channels",
     "byzantine_mask",
     "coordinate_median",
+    "coordinate_median_tree",
     "cubic_model_value",
     "cubic_residual",
     "krum",
+    "krum_tree",
     "make_hvp",
     "make_robust_sgd_step",
     "make_stateful_train_step",
     "make_train_step",
     "mean",
+    "mean_tree",
     "norm_trim",
     "norm_trim_tree",
+    "trimmed_mean_tree",
     "solve_cubic_exact",
     "solve_cubic_gd",
     "solve_cubic_hvp",

@@ -9,6 +9,11 @@ plain mean (non-robust reference).
 All aggregators take updates stacked on a leading worker axis:
 ``updates: (m, d)`` (or a pytree whose leaves have a leading ``m`` axis for
 the tree variants) and return the aggregated ``(d,)`` update.
+
+Runtimes do not call these functions directly any more: they resolve an
+:class:`repro.api.aggregators.Aggregator` from a spec string
+(``"norm_trim:0.25"``, ``"krum:2"``, …) once at build time and call it at
+both aggregation sites.  This module stays the pure math layer.
 """
 from __future__ import annotations
 
@@ -18,8 +23,21 @@ import jax
 import jax.numpy as jnp
 
 
+def _stack_tree(tree, m):
+    """Worker-stacked pytree → (m, D) float32 matrix (concat of leaves)."""
+    return jnp.concatenate(
+        [x.reshape(m, -1).astype(jnp.float32)
+         for x in jax.tree_util.tree_leaves(tree)],
+        axis=1,
+    )
+
+
 def mean(updates):
     return jnp.mean(updates, axis=0)
+
+
+def mean_tree(updates_tree):
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), updates_tree)
 
 
 @partial(jax.jit, static_argnames=("beta",))
@@ -65,6 +83,14 @@ def coordinate_median(updates):
     return jnp.median(updates, axis=0)
 
 
+def coordinate_median_tree(updates_tree):
+    """Coordinate-wise median per leaf of a worker-stacked pytree."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.median(x.astype(jnp.float32), axis=0).astype(x.dtype),
+        updates_tree,
+    )
+
+
 @partial(jax.jit, static_argnames=("trim_frac",))
 def trimmed_mean(updates, trim_frac: float):
     """Coordinate-wise trimmed mean: drop the top/bottom ``trim_frac``·m
@@ -78,20 +104,45 @@ def trimmed_mean(updates, trim_frac: float):
     return srt[k : m - k].mean(0)
 
 
-@partial(jax.jit, static_argnames=("n_byz",))
-def krum(updates, n_byz: int):
-    """Krum [BMGS17]: select the single update whose summed squared distance
-    to its m−f−2 nearest neighbours is smallest.  Quadratic in m — included
-    as the classic baseline the paper's O(m log m) norm sort improves on."""
-    m = updates.shape[0]
-    flat = updates.reshape(m, -1)
+def trimmed_mean_tree(updates_tree, trim_frac: float):
+    """Coordinate-wise trimmed mean per leaf of a worker-stacked pytree."""
+    m = jax.tree_util.tree_leaves(updates_tree)[0].shape[0]
+    k = min(int(round(trim_frac * m)), (m - 1) // 2)
+
+    def agg_leaf(x):
+        srt = jnp.sort(x.astype(jnp.float32), axis=0)
+        kept = srt if k == 0 else srt[k : m - k]
+        return kept.mean(0).astype(x.dtype)
+
+    return jax.tree_util.tree_map(agg_leaf, updates_tree)
+
+
+def krum_select(flat, n_byz: int):
+    """Krum's selected worker index for an (m, D) matrix: the update whose
+    summed squared distance to its m−f−2 nearest neighbours is smallest."""
+    m = flat.shape[0]
     d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
     k = max(m - n_byz - 2, 1)
     # distance to k nearest others (exclude self-distance 0 via large diag)
     d2 = d2 + jnp.eye(m) * 1e30
     nearest = jnp.sort(d2, axis=1)[:, :k]
-    scores = nearest.sum(1)
-    return updates[jnp.argmin(scores)]
+    return jnp.argmin(nearest.sum(1))
+
+
+@partial(jax.jit, static_argnames=("n_byz",))
+def krum(updates, n_byz: int):
+    """Krum [BMGS17].  Quadratic in m — included as the classic baseline
+    the paper's O(m log m) norm sort improves on."""
+    m = updates.shape[0]
+    return updates[krum_select(updates.reshape(m, -1), n_byz)]
+
+
+def krum_tree(updates_tree, n_byz: int):
+    """Krum over a worker-stacked pytree: score on the concatenated flat
+    view, then gather the selected worker's whole tree."""
+    m = jax.tree_util.tree_leaves(updates_tree)[0].shape[0]
+    j = krum_select(_stack_tree(updates_tree, m), n_byz)
+    return jax.tree_util.tree_map(lambda x: x[j], updates_tree), j
 
 
 AGGREGATORS = {

@@ -12,9 +12,12 @@ Adaptation of Algorithm 1 to TPU pods (DESIGN.md §3/§5):
   ``fori_loop`` over the full ``(m, …)`` worker-stacked tree so per-worker
   state can carry explicit sharding constraints (worker→data, TP dims→model)
   — without them GSPMD replicates m full-model buffers per device;
-* the center is virtual: per-worker update norms are reduced to ``m``
-  scalars, ranked, and the smallest ``(1−β)m`` averaged — a masked
-  all-reduce, i.e. the same collective a data-parallel step already pays.
+* the center is virtual: the configured :mod:`repro.api.aggregators`
+  rule runs on the worker-stacked update tree.  The default norm-trim
+  reduces per-worker norms to ``m`` scalars, ranks them, and averages the
+  smallest ``(1−β)m`` — a masked all-reduce, i.e. the same collective a
+  data-parallel step already pays; krum / trimmed-mean /
+  coordinate-median run through the same tree-aware interface.
 
 Two gradient modes (paper's Remark 5):
 * ``two_round=False`` — one communication phase, workers use local g_i
@@ -43,7 +46,6 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from . import attacks as attacks_lib
 from .tree_util import tree_axpy, tree_size, tree_sqnorm
 from ..comm import TreeChannel
 
@@ -65,6 +67,10 @@ class DistributedNewtonConfig:
     # variant threads the (m, d)-tree memory; make_train_step ignores it.
     error_feedback: str = "none"
     ef_damping: float = 0.75
+    # center aggregation rule as a repro.api.aggregators spec string
+    # (tree-aware variants run here); None keeps the legacy β-field
+    # behaviour (norm_trim(β) when β > 0, plain mean otherwise)
+    aggregator: Optional[str] = None
 
 
 def _per_worker_norms(s_tree, m):
@@ -87,21 +93,24 @@ def _merge_workers(batch):
 
 
 def _tree_attack_hook(attack_name: str, attack_alpha: float, m: int):
-    """Update-level Byzantine injection over a worker-stacked tree."""
-    if attack_name == "none" or attack_alpha <= 0:
-        return None
-    mask = attacks_lib.byzantine_mask(m, attack_alpha)
-    kw = {"sigma": 10.0} if attack_name == "gaussian" else {}
+    """Update-level Byzantine injection over a worker-stacked tree.
 
-    def hook(key, tree):
-        return jax.tree_util.tree_map(
-            lambda x: attacks_lib.UPDATE_ATTACKS[attack_name](
-                key, x, mask, **kw
-            ),
-            tree,
+    ``attack_name`` is a :mod:`repro.api.attacks` spec string (bare names
+    like ``"gaussian"`` keep their registry defaults; ``"gaussian:50.0"``
+    parametrizes).  Label attacks are rejected at build time — the mesh
+    batches carry no label channel.
+    """
+    from ..api.attacks import make_attack
+    from ..api.errors import SpecError
+
+    rule = make_attack(attack_name, attack_alpha)
+    if rule.kind == "label":
+        raise SpecError(
+            f"attack {attack_name!r} corrupts worker labels, but the mesh "
+            f"runtime's batches have no label channel — use an update-level "
+            f"attack (gaussian/negative/saddle)"
         )
-
-    return hook
+    return rule.tree_hook(m)
 
 
 def build_channels(
@@ -149,13 +158,24 @@ def _make_step(
     stateful: bool,
 ):
     """The shared step body; see make_train_step / make_stateful_train_step."""
+    from ..api.aggregators import default_aggregator_spec, make_aggregator
+
     m = m_workers
-    n_keep = max(1, int(round((1.0 - cfg.beta) * m)))
+    # resolved ONCE at build time, like the channels — the registry rule
+    # replaces the formerly hardcoded norm-trim at the virtual center
+    aggregator = make_aggregator(
+        cfg.aggregator if cfg.aggregator is not None
+        else default_aggregator_spec(cfg.beta)
+    )
     grad_fn = jax.grad(loss_fn)
     cw = constrain_worker or (lambda t: t)
     cu = constrain_update or (lambda t: t)
     uplink: TreeChannel = channels["uplink"]
     downlink: TreeChannel = channels["downlink"]
+    # measured δ̂ costs two O(m·d) tree reductions per step; only pay for
+    # it when an adaptive schedule could consume the signal
+    _up_spec = getattr(uplink.tree_compressor, "spec", None)
+    measure_delta = isinstance(_up_spec, str) and _up_spec.startswith("adaptive")
 
     def hvp_all(params, batch, s):
         """Per-worker H_i·s_i on each worker's local batch (m-stacked)."""
@@ -251,23 +271,26 @@ def _make_step(
 
         # ---- uplink channel: δ-compress (+EF) then Byzantine-inject ----
         # (attacks corrupt the reconstructed tree — Byzantine workers send
-        # arbitrary payloads, so compression grants them no protection)
+        # arbitrary payloads, so compression grants them no protection;
+        # δ̂ is measured before injection so the metric sees the wire)
         k_atk, k_comp, k_down = jax.random.split(key, 3)
         up_state = comm_state["uplink"] if stateful else None
-        s, up_state = uplink.transmit(
-            s, up_state, key=k_comp, attack_key=k_atk
-        )
+        if measure_delta:
+            s, up_state, uplink_delta = uplink.transmit(
+                s, up_state, key=k_comp, attack_key=k_atk, measure=True
+            )
+        else:
+            s, up_state = uplink.transmit(
+                s, up_state, key=k_comp, attack_key=k_atk
+            )
+            uplink_delta = jnp.float32(1.0)  # stable metrics structure
 
-        # ---- Center: norm-based thresholding (Algorithm 1 step 6) ----
+        # ---- Center: the resolved registry aggregation rule ----
+        # (Algorithm 1 step 6 is norm_trim; krum / trimmed_mean /
+        # coordinate_median / mean run here through the same interface)
         norms = _per_worker_norms(s, m)
-        ranks = jnp.argsort(jnp.argsort(norms))
-        keep = (ranks < n_keep).astype(jnp.float32)
-
-        def masked_mean(x):
-            w = keep.reshape((m,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-            return (w * x).sum(0) / jnp.asarray(n_keep, x.dtype)
-
-        update = cu(jax.tree_util.tree_map(masked_mean, s))
+        update, keep = aggregator.tree(s)
+        update = cu(update)
 
         # ---- downlink channel: compressed broadcast of the step ----
         down_state = comm_state["downlink"] if stateful else None
@@ -289,6 +312,7 @@ def _make_step(
             "update_norms": norms,
             "kept": keep,
             "update_norm": jnp.sqrt(tree_sqnorm(update)),
+            "uplink_delta": uplink_delta,
         }
         return new_params, metrics, {"uplink": up_state, "downlink": down_state}
 

@@ -2,8 +2,11 @@
 
 This module is the *paper-faithful* runtime: m workers simulated on one
 process, explicit per-worker gradients / Hessians (the paper's LIBSVM regime,
-d ≤ a few hundred), the paper's Algorithm 2 inner solver, the four Byzantine
-attacks, and norm-based thresholding at the center.
+d ≤ a few hundred), the paper's Algorithm 2 inner solver, the Byzantine
+attacks resolved from the :mod:`repro.api.attacks` registry, and a
+:mod:`repro.api.aggregators` registry rule at the center (the paper's
+norm-based thresholding by default; krum / trimmed-mean /
+coordinate-median / mean as declared).
 
 Every transmission goes through :mod:`repro.comm` — the unified
 communication-channel layer (§1's third pillar / COMRADE): an **uplink**
@@ -27,8 +30,6 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from . import attacks as attacks_lib
-from .aggregation import norm_trim
 from .cubic import solve_cubic_gd
 from ..comm import VectorChannel, WireLedger
 from ..compression import AdaptiveTopK
@@ -54,14 +55,20 @@ class NewtonConfig:
     grad_compressor: Optional[str] = None      # Remark-5 gradient round
     error_feedback: str = "ef21"  # "none" | "ef" | "ef21" (tracking)
     ef_damping: float = 0.75      # θ; mid-plateau on w8a (see error_feedback.py)
+    # center aggregation rule as a repro.api.aggregators spec string
+    # ("norm_trim:0.25", "krum:2", "trimmed_mean:0.1", "coordinate_median",
+    # "mean"); None keeps the legacy β-field behaviour (norm_trim(β) when
+    # β > 0, plain mean otherwise)
+    aggregator: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class AttackConfig:
-    name: str = "none"            # one of attacks_lib UPDATE/LABEL attacks
+    name: str = "none"            # a repro.api.attacks rule name
     alpha: float = 0.0            # Byzantine fraction
     sigma: float = 10.0           # gaussian attack scale
     c: float = 0.9                # negative-update attack scale
+    scale: float = 5.0            # saddle attack scale
     num_classes: int = 2
 
 
@@ -84,9 +91,20 @@ class DistributedCubicNewton:
         config: NewtonConfig = NewtonConfig(),
         attack: AttackConfig = AttackConfig(),
     ):
+        # registries resolve ONCE here, never inside a trace (the api
+        # import is lazy purely to keep the package import graph acyclic)
+        from ..api.aggregators import default_aggregator_spec, make_aggregator
+        from ..api.attacks import resolve_attack
+
         self.loss_fn = loss_fn
         self.config = config
         self.attack = attack
+        self.aggregator = make_aggregator(
+            config.aggregator
+            if config.aggregator is not None
+            else default_aggregator_spec(config.beta)
+        )
+        self._attack_rule = resolve_attack(attack)
         self._grad_fn = jax.grad(loss_fn)
         self._hess_fn = jax.hessian(loss_fn)
         self.rounds_per_step = 2 if config.exact_gradient else 1
@@ -104,18 +122,6 @@ class DistributedCubicNewton:
         static shape (an adaptive compressor's k) changes."""
         self._step = jax.jit(self._step_impl)
 
-    def _attack_hook(self, m: int):
-        atk = self.attack
-        if atk.name not in attacks_lib.UPDATE_ATTACKS or atk.name == "none":
-            return None
-        mask = attacks_lib.byzantine_mask(m, atk.alpha)
-        kwargs = self._attack_kwargs()
-
-        def hook(key, s):
-            return attacks_lib.UPDATE_ATTACKS[atk.name](key, s, mask, **kwargs)
-
-        return hook
-
     def _ensure_channels(self, d: int, m: int):
         if self._dims == (d, m):
             return
@@ -123,7 +129,7 @@ class DistributedCubicNewton:
         self.uplink = VectorChannel(
             "uplink", cfg.compressor, d, m,
             error_feedback=cfg.error_feedback, damping=cfg.ef_damping,
-            attack_hook=self._attack_hook(m),
+            attack_hook=self._attack_rule.update_hook(m),
         )
         self.downlink = VectorChannel(
             "downlink", cfg.downlink_compressor, d, 1,
@@ -172,31 +178,26 @@ class DistributedCubicNewton:
         )
 
     def _step_impl(self, w, v, state, X, y, key):
-        cfg, atk = self.config, self.attack
+        cfg = self.config
         m = X.shape[0]
-        mask = attacks_lib.byzantine_mask(m, atk.alpha)
         k_label, k_update, k_comp, k_grad, k_down = jax.random.split(key, 5)
         new_state = dict(state)
 
         # Data-level attacks corrupt Byzantine workers' labels *before* the
         # local computation (they "train on wrong labels", §6).
-        y_used = y
-        if atk.name in attacks_lib.LABEL_ATTACKS and atk.name != "none":
-            y_used = attacks_lib.LABEL_ATTACKS[atk.name](
-                k_label, y, mask, num_classes=atk.num_classes
-            )
+        y_used = self._attack_rule.corrupt_labels(k_label, y)
 
         global_g = None
         if cfg.exact_gradient:
             # Remark 5: round 1 ships local gradients through the gradient
             # channel (δ-compressed + EF21 when configured); the center
-            # averages and broadcasts ∇f(x_k).  Byzantine workers corrupt
-            # their share too, so we guard with the same norm-trim rule.
+            # aggregates with the SAME registry rule as the update round
+            # (Byzantine workers corrupt their gradient share too).
             per_g = jax.vmap(self._grad_fn, in_axes=(None, 0, 0))(w, X, y_used)
             per_g, new_state["grad"] = self.grad_uplink.transmit(
                 per_g, state["grad"], key=k_grad
             )
-            global_g, _ = norm_trim(per_g, max(cfg.beta, 1e-9))
+            global_g, _ = self.aggregator(per_g)
 
         s = jax.vmap(
             lambda Xi, yi: self._worker_solve(w, Xi, yi, global_g)
@@ -205,16 +206,17 @@ class DistributedCubicNewton:
         # Uplink: honest workers δ-compress s_i (EF/EF21 memory carries the
         # residual across rounds); the channel's Byzantine hook corrupts the
         # *reconstructed* vectors — Byzantine workers send arbitrary
-        # payloads, so compression grants them no protection.
-        s, new_state["uplink"] = self.uplink.transmit(
-            s, state["uplink"], key=k_comp, attack_key=k_update
+        # payloads, so compression grants them no protection.  ``measure``
+        # surfaces the achieved contraction δ̂ (one norm ratio, taken
+        # BEFORE Byzantine injection) for the adaptive-k schedule.
+        s, new_state["uplink"], uplink_delta = self.uplink.transmit(
+            s, state["uplink"], key=k_comp, attack_key=k_update, measure=True
         )
 
-        # Center: norm-based thresholding (Algorithm 1, step 6).
-        if cfg.beta > 0:
-            agg, keep = norm_trim(s, cfg.beta)
-        else:
-            agg, keep = s.mean(0), jnp.ones((m,))
+        # Center: the resolved aggregation rule (Algorithm 1, step 6 is
+        # norm_trim; krum / trimmed_mean / coordinate_median / mean come
+        # from the same registry).
+        agg, keep = self.aggregator(s)
         # optional momentum on the aggregated direction (CRm, [WZLL20] —
         # cited in §2; the paper itself uses v ≡ agg, i.e. momentum = 0)
         v_new = cfg.momentum * v + agg
@@ -229,14 +231,8 @@ class DistributedCubicNewton:
         w_new = w + delta
         return w_new, v_new, new_state, {
             "update_norms": jnp.linalg.norm(s, axis=-1), "keep": keep,
+            "uplink_delta": uplink_delta,
         }
-
-    def _attack_kwargs(self):
-        if self.attack.name == "gaussian":
-            return {"sigma": self.attack.sigma}
-        if self.attack.name == "negative":
-            return {"c": self.attack.c}
-        return {}
 
     # ------------------------------------------------------------------
     def step(self, w, X, y, key, v=None, state=None):
@@ -261,14 +257,20 @@ class DistributedCubicNewton:
             down += 32 * self.uplink.d  # center broadcasts the averaged g
         return {"uplink": up, "downlink": down}
 
-    def _maybe_adapt(self, grad_norm: float) -> None:
-        """Feed adaptive compressors the host-side signals; rebuild the
+    def _maybe_adapt(self, grad_norm: float,
+                     measured_delta: Optional[float] = None) -> None:
+        """Feed adaptive compressors the host-side signals (gradient-norm
+        plateau + the uplink channel's measured per-round δ); rebuild the
         jitted step when any k changed (static shapes moved)."""
         changed = False
-        for ch in self.channels.values():
+        for name, ch in self.channels.items():
             comp = ch.compressor
             if isinstance(comp, AdaptiveTopK):
-                changed |= comp.schedule_update(grad_norm=grad_norm)
+                changed |= comp.schedule_update(
+                    grad_norm=grad_norm,
+                    measured_delta=(measured_delta
+                                    if name == "uplink" else None),
+                )
         if changed:
             self._rebuild_jit()
 
@@ -298,18 +300,20 @@ class DistributedCubicNewton:
         ledger = self.ledger
         ledger.reset()
         hist = {"loss": [], "grad_norm": [], "eval": [], "rounds": 0,
-                "bits_cumulative": []}
+                "bits_cumulative": [], "uplink_delta": []}
         w = w0
         v = jnp.zeros_like(w0)
         state = self.init_comm_state()
         for t in range(n_steps):
             key, sub = jax.random.split(key)
-            w, v, state, _ = self.step(w, X, y, sub, v, state)
+            w, v, state, info = self.step(w, X, y, sub, v, state)
             # re-read every step: adaptive compressors move k between steps
             bps = self.bits_per_step()
             ledger.record(uplink=bps["uplink"], downlink=bps["downlink"],
                           rounds=self.rounds_per_step)
             hist["bits_cumulative"].append(ledger.total_bits)
+            delta_hat = float(info["uplink_delta"])
+            hist["uplink_delta"].append(delta_hat)
             gn = float(jnp.linalg.norm(gradf(w, Xf, yf)))
             hist["loss"].append(float(lossf(w, Xf, yf)))
             hist["grad_norm"].append(gn)
@@ -317,6 +321,6 @@ class DistributedCubicNewton:
                 hist["eval"].append(float(eval_fn(w)))
             if grad_tol is not None and gn <= grad_tol:
                 break
-            self._maybe_adapt(gn)
+            self._maybe_adapt(gn, measured_delta=delta_hat)
         hist.update(ledger.snapshot())
         return w, hist

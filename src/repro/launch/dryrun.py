@@ -20,8 +20,8 @@ import time
 
 import jax
 
+from repro.api import ExperimentSpec
 from repro.configs import ARCHS, INPUT_SHAPES, VARIANTS, get_config
-from repro.core.distributed import DistributedNewtonConfig
 from repro.launch.hlo import Roofline, analyze_hlo, model_flops
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import make_problem
@@ -57,14 +57,20 @@ def count_active_params(cfg, n_total):
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             solver_iters: int = 2, two_round: bool = False,
             worker_groups: int = 1, compressor: str | None = None,
-            error_feedback: str = "none", verbose: bool = True) -> dict:
+            error_feedback: str = "none", aggregator: str | None = None,
+            verbose: bool = True) -> dict:
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
-    newton = DistributedNewtonConfig(
-        solver_iters=solver_iters, two_round=two_round,
-        compressor=compressor, error_feedback=error_feedback)
+    # config built (and validated) through the experiment facade
+    newton = ExperimentSpec(
+        problem="external", runtime="mesh",
+        solver_iters=solver_iters, exact_gradient=two_round,
+        compressor=compressor, error_feedback=error_feedback,
+        aggregator=aggregator if aggregator is not None
+        else "norm_trim:0.125",
+    ).to_distributed_config()
 
     problem = make_problem(cfg, shape, mesh, newton, worker_groups=worker_groups)
     rec = {
@@ -166,7 +172,11 @@ def main(argv=None):
                     help="uplink channel spec (e.g. topk:0.1)")
     ap.add_argument("--error-feedback", default="none",
                     choices=["none", "ef", "ef21"],
-                    help="thread mesh-scale EF channel state (stateful step)")
+                    help="thread mesh-scale EF channel state (stateful step; "
+                         "requires --compressor)")
+    ap.add_argument("--aggregator", default=None,
+                    help="center aggregation spec (norm_trim:<beta>/krum:<n>/"
+                         "trimmed_mean:<f>/coordinate_median/mean)")
     ap.add_argument("--json", default=None, help="append JSONL records here")
     args = ap.parse_args(argv)
 
@@ -182,7 +192,8 @@ def main(argv=None):
                               two_round=args.two_round,
                               worker_groups=args.worker_groups,
                               compressor=args.compressor,
-                              error_feedback=args.error_feedback)
+                              error_feedback=args.error_feedback,
+                              aggregator=args.aggregator)
             except Exception as e:  # noqa: BLE001 — report, keep sweeping
                 rec = {"arch": a, "shape": s, "status": "error",
                        "error": f"{type(e).__name__}: {e}"}

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..api import ExperimentSpec
 from ..configs.base import INPUT_SHAPES, InputShape, ModelConfig
 from ..core.distributed import (
     DistributedNewtonConfig,
@@ -125,7 +126,10 @@ def make_problem(
         grouped = worker_groups > 1
         m = num_workers(mesh) // worker_groups
         assert m >= 2, "need ≥2 workers for trimming to mean anything"
-        newton = newton or DistributedNewtonConfig()
+        # default config builds through the validated facade
+        newton = newton or ExperimentSpec(
+            problem="external", runtime="mesh", aggregator="norm_trim:0.125"
+        ).to_distributed_config()
         w_shard = worker_tree_shardings(params_shape, mesh, grouped=grouped)
 
         def constrain_worker(tree):

@@ -6,7 +6,14 @@ shardings come from the same code paths the dry-run proves out).
 Example (the examples/train_lm.py quickstart uses this):
 
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
-        --preset smoke --steps 50 --m-workers 4 --attack negative --alpha 0.25
+        --preset smoke --steps 50 --m-workers 4 --attack negative \
+        --alpha 0.25 --beta 0.5
+
+All solver/channel/resilience configuration builds through one validated
+:class:`repro.api.ExperimentSpec` (β > α, spec-string grammar, EF/
+compressor compatibility are checked before anything traces);
+``--aggregator`` takes any registry spec (``norm_trim:0.5``, ``krum:1``,
+``trimmed_mean:0.25``, ``coordinate_median``, ``mean``).
 """
 from __future__ import annotations
 
@@ -18,11 +25,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from ..api import ExperimentSpec, default_aggregator_spec
 from ..checkpoint import save_checkpoint
 from ..comm import WireLedger
 from ..configs import get_config
 from ..core.distributed import (
-    DistributedNewtonConfig,
     make_robust_sgd_step,
     make_stateful_train_step,
     make_train_step,
@@ -66,6 +73,7 @@ def run_training(
     solver_iters: int = 4,
     attack: str = "none",
     alpha: float = 0.0,
+    aggregator: str | None = None,
     optimizer: str = "cubic_newton",
     lr: float = 0.3,
     two_round: bool = False,
@@ -88,12 +96,20 @@ def run_training(
     comm_state = None
     wire_bits = None
     if optimizer == "cubic_newton":
-        ncfg = DistributedNewtonConfig(
-            M=M, eta=eta, beta=beta, solver_iters=solver_iters,
-            two_round=two_round, compressor=compressor,
+        # one declarative spec — validated (β > α, spec grammars, EF/
+        # compressor compatibility) before anything traces — is the only
+        # config constructor on this path.
+        spec = ExperimentSpec(
+            problem="external", runtime="mesh", m_workers=m_workers,
+            M=M, eta=eta, solver_iters=solver_iters,
+            exact_gradient=two_round, compressor=compressor,
             downlink_compressor=downlink_compressor,
             error_feedback=error_feedback,
+            aggregator=aggregator if aggregator is not None
+            else default_aggregator_spec(beta),
+            attack=attack, alpha=alpha, seed=seed,
         )
+        ncfg = spec.to_distributed_config()
         if error_feedback != "none":
             # stateful channels: the (m, d)-tree EF memory is threaded (and
             # donated) through the step so long runs keep error feedback.
@@ -157,8 +173,13 @@ def main(argv=None):
     ap.add_argument("--beta", type=float, default=0.25)
     ap.add_argument("--solver-iters", type=int, default=4)
     ap.add_argument("--attack", default="none",
-                    choices=["none", "gaussian", "negative", "saddle"])
+                    help="attack spec (none/gaussian[:sigma]/negative[:c]/"
+                         "saddle[:scale])")
     ap.add_argument("--alpha", type=float, default=0.0)
+    ap.add_argument("--aggregator", default=None,
+                    help="aggregator spec (norm_trim:<beta>/krum:<n>/"
+                         "trimmed_mean:<f>/coordinate_median/mean); "
+                         "default norm_trim:<--beta>")
     ap.add_argument("--optimizer", default="cubic_newton",
                     choices=["cubic_newton", "robust_sgd"])
     ap.add_argument("--lr", type=float, default=0.3)

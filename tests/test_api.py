@@ -1,0 +1,320 @@
+"""repro.api facade: registry resolution, ExperimentSpec round-trip +
+build-time validation, every registry aggregator running in BOTH runtimes
+(mean-parity at α = 0 against the legacy hardcoded path), aggregator
+resilience under the saddle/gaussian attacks at α = 0.2, and the
+measured-δ feedback into the adaptive top-k schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    ExperimentSpec,
+    SpecError,
+    make_aggregator,
+    make_attack,
+    to_attack_config,
+)
+from repro.compression import AdaptiveTopK
+from repro.core import DistributedCubicNewton, NewtonConfig
+from repro.core.distributed import DistributedNewtonConfig, make_train_step
+
+ALL_AGGREGATORS = ("mean", "norm_trim:0.25", "krum:2", "trimmed_mean:0.25",
+                   "coordinate_median")
+
+
+# ------------------------- registries --------------------------------------
+
+
+def test_aggregator_registry_resolves_specs():
+    for spec in ALL_AGGREGATORS:
+        agg = make_aggregator(spec)
+        assert agg.name == spec.partition(":")[0]
+    assert make_aggregator("norm_trim:0.3").beta == pytest.approx(0.3)
+    assert make_aggregator("krum:3").n_byz == 3
+    # pass-through of an already-resolved instance
+    agg = make_aggregator("mean")
+    assert make_aggregator(agg) is agg
+
+
+def test_aggregator_registry_rejects_bad_specs():
+    with pytest.raises(SpecError, match="unknown aggregator"):
+        make_aggregator("median_of_means")
+    with pytest.raises(SpecError, match="β in \\(0, 1\\)"):
+        make_aggregator("norm_trim:1.5")
+    with pytest.raises(SpecError, match="trim fraction"):
+        make_aggregator("trimmed_mean:0.7")
+    with pytest.raises(SpecError, match="integer"):
+        make_aggregator("krum:two")
+
+
+def test_attack_registry_resolves_specs():
+    atk = make_attack("gaussian:50.0", 0.2)
+    assert atk.kind == "update" and atk.kwargs == {"sigma": 50.0}
+    assert make_attack("negative", 0.2).kwargs == {"c": 0.9}  # default
+    assert make_attack("saddle:7.5", 0.1).kwargs == {"scale": 7.5}
+    assert make_attack("flip", 0.2).name == "flipped_label"  # alias
+    assert make_attack("flipped_label", 0.2).kind == "label"
+    assert make_attack("gaussian", 0.0).kind == "none"  # α = 0 disarms
+    cfg = to_attack_config("gaussian:50.0", 0.2)
+    assert cfg.name == "gaussian" and cfg.sigma == 50.0 and cfg.alpha == 0.2
+
+
+def test_attack_registry_rejects_bad_specs():
+    with pytest.raises(SpecError, match="unknown attack"):
+        make_attack("dropout", 0.2)
+    with pytest.raises(SpecError, match="no parameter"):
+        make_attack("flipped_label:3", 0.2)
+    with pytest.raises(SpecError, match="number"):
+        make_attack("gaussian:big", 0.2)
+
+
+def test_attack_hooks_corrupt_only_byzantine_rows():
+    atk = make_attack("gaussian:100.0", 0.25)
+    s = jnp.ones((8, 5))
+    out = atk.update_hook(8)(jax.random.PRNGKey(0), s)
+    np.testing.assert_array_equal(out[2:], s[2:])       # honest untouched
+    assert float(jnp.abs(out[:2] - 1.0).max()) > 1.0    # byzantine moved
+
+
+# ------------------------- ExperimentSpec serde ----------------------------
+
+
+def test_spec_dict_roundtrip_exact():
+    spec = ExperimentSpec(
+        problem="w8a-robust", aggregator="norm_trim:0.25",
+        attack="gaussian:50.0", alpha=0.2, compressor="topk:0.1",
+        downlink_compressor="signnorm", error_feedback="ef21",
+        exact_gradient=True, grad_compressor="topk:0.25",
+        solver_iters=300, seed=7,
+    )
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(SpecError, match="unknown ExperimentSpec fields"):
+        ExperimentSpec.from_dict({**spec.to_dict(), "bogus_knob": 3})
+
+
+# ------------------------- build-time validation ---------------------------
+
+
+def test_validate_beta_leq_alpha_raises():
+    spec = ExperimentSpec(problem="synthetic-logistic:400:10",
+                          aggregator="norm_trim:0.2", attack="gaussian",
+                          alpha=0.2)
+    with pytest.raises(SpecError, match="β > α"):
+        spec.validate()
+
+
+def test_validate_unknown_specs_raise():
+    base = ExperimentSpec(problem="synthetic-logistic:400:10")
+    with pytest.raises(SpecError, match="unknown aggregator"):
+        base.replace(aggregator="geometric_median").validate()
+    with pytest.raises(SpecError, match="unknown attack"):
+        base.replace(attack="bitflip").validate()
+    with pytest.raises(SpecError, match="unknown compressor"):
+        base.replace(compressor="gzip").validate()
+    with pytest.raises(SpecError, match="unknown problem"):
+        base.replace(problem="mnist").validate()
+
+
+def test_validate_ef_without_compressor_raises():
+    spec = ExperimentSpec(problem="synthetic-logistic:400:10",
+                          error_feedback="ef21")
+    with pytest.raises(SpecError, match="compressors are None"):
+        spec.validate()
+    # auto mode (None) quietly resolves instead of raising
+    assert spec.replace(error_feedback=None).validate() \
+        .resolved_error_feedback() == "none"
+    assert spec.replace(error_feedback=None, compressor="topk:0.1") \
+        .validate().resolved_error_feedback() == "ef21"
+
+
+def test_validate_kernel_tile_limit_and_grad_round():
+    base = ExperimentSpec(problem="synthetic-logistic:400:2000")
+    with pytest.raises(SpecError, match="single-tile"):
+        base.replace(compressor="topk_kernel:0.1").validate()
+    with pytest.raises(SpecError, match="exact_gradient"):
+        base.replace(grad_compressor="topk:0.1").validate()
+    with pytest.raises(SpecError, match="label"):
+        ExperimentSpec(runtime="mesh", problem="quadratic:8",
+                       attack="flipped_label", alpha=0.2).validate()
+
+
+def test_validate_fixed_cluster_size_for_paper_workloads():
+    """Paper workloads pin m=20; a mismatched m_workers would make the
+    resilience checks run against the wrong cluster size — reject it."""
+    with pytest.raises(SpecError, match="m_workers=20"):
+        ExperimentSpec(problem="a9a-robust", m_workers=10).validate()
+    ExperimentSpec(problem="a9a-robust", m_workers=20).validate()
+
+
+def test_make_problem_is_memoized():
+    from repro.api import make_problem
+
+    a = make_problem("synthetic-logistic:400:10", 4, seed=3)
+    b = make_problem("synthetic-logistic:400:10", 4, seed=3)
+    assert a is b  # sweeps share one materialization per (spec, m, seed)
+    assert make_problem("synthetic-logistic:400:10", 4, seed=4) is not a
+
+
+def test_validate_krum_and_trimmed_mean_strength():
+    base = ExperimentSpec(problem="synthetic-logistic:400:10", m_workers=10,
+                          attack="gaussian", alpha=0.2)
+    with pytest.raises(SpecError, match="krum"):
+        base.replace(aggregator="krum:1").validate()   # n_byz < α·m
+    with pytest.raises(SpecError, match="trimmed_mean"):
+        base.replace(aggregator="trimmed_mean:0.1").validate()
+    base.replace(aggregator="krum:2").validate()
+    base.replace(aggregator="trimmed_mean:0.25").validate()
+
+
+# ------------------------- both runtimes, all aggregators ------------------
+
+
+@pytest.fixture(scope="module")
+def paper_spec():
+    return ExperimentSpec(problem="synthetic-logistic:1200:12", m_workers=6)
+
+
+@pytest.mark.parametrize("agg", ALL_AGGREGATORS)
+def test_every_aggregator_runs_paper_runtime(paper_spec, agg):
+    exp = paper_spec.replace(aggregator=agg).build()
+    _, hist = exp.run(4)
+    assert all(np.isfinite(hist["loss"]))
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+@pytest.mark.parametrize("agg", ALL_AGGREGATORS)
+def test_every_aggregator_runs_mesh_runtime(agg):
+    exp = ExperimentSpec(runtime="mesh", problem="quadratic:8", m_workers=6,
+                         aggregator=agg, solver_iters=4).build()
+    _, hist = exp.run(6)
+    assert all(np.isfinite(hist["loss"]))
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+def test_mean_aggregator_parity_with_legacy_paper_runtime(paper_spec):
+    """The registry "mean" must reproduce the legacy hardcoded β = 0 path
+    bit-for-bit at α = 0 (identity-aggregator parity)."""
+    exp = paper_spec.replace(aggregator="mean").build()
+    w_new, h_new = exp.run(4)
+    legacy = DistributedCubicNewton(
+        exp.problem.loss_fn, NewtonConfig(M=10.0, eta=1.0, beta=0.0)
+    )
+    w_old, h_old = legacy.run(
+        exp.problem.w0, exp.problem.X_workers, exp.problem.y_workers, 4
+    )
+    np.testing.assert_array_equal(np.asarray(w_new), np.asarray(w_old))
+    assert h_new["loss"] == h_old["loss"]
+
+
+def test_norm_trim_aggregator_parity_with_legacy_beta_field():
+    """aggregator="norm_trim:β" ≡ the legacy beta-field path, mesh runtime
+    (bit-identical params out of one jitted step)."""
+    exp = ExperimentSpec(runtime="mesh", problem="quadratic:8", m_workers=4,
+                         aggregator="norm_trim:0.25", solver_iters=3).build()
+    legacy_cfg = DistributedNewtonConfig(M=10.0, beta=0.25, solver_iters=3)
+    legacy_step = jax.jit(
+        make_train_step(exp.problem.loss_fn, legacy_cfg, 4)
+    )
+    key = jax.random.PRNGKey(5)
+    p_new, m_new = exp.step(exp.problem.w0, exp.problem.batch, key)
+    p_old, m_old = legacy_step(exp.problem.w0, exp.problem.batch, key)
+    for a, b in zip(jax.tree_util.tree_leaves(p_new),
+                    jax.tree_util.tree_leaves(p_old)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(m_new["kept"], m_old["kept"])
+
+
+# ------------------------- resilience: escape the saddle -------------------
+
+
+@pytest.mark.parametrize("agg", ["norm_trim:0.3", "krum:2",
+                                 "trimmed_mean:0.2", "coordinate_median"])
+@pytest.mark.parametrize("attack", ["saddle", "gaussian"])
+def test_registry_aggregators_escape_saddle_under_attack(agg, attack):
+    """Each robust registry rule escapes the strict saddle at α = 0.2
+    under both the colluding saddle attack and gaussian noise."""
+    spec = ExperimentSpec(
+        problem="matrix-factor:10:2", m_workers=10, M=10.0,
+        aggregator=agg, attack=attack, alpha=0.2, seed=0,
+    )
+    exp = spec.build()
+    _, hist = exp.run(15)
+    assert hist["loss"][-1] < 0.2 * exp.problem.saddle_value
+    assert all(np.isfinite(hist["loss"]))
+
+
+def test_mean_is_defeated_by_the_attacks_the_rules_survive():
+    """The contrast: the non-robust baseline stays trapped near the
+    saddle value under the colluding attack."""
+    exp = ExperimentSpec(
+        problem="matrix-factor:10:2", m_workers=10, M=10.0,
+        aggregator="mean", attack="saddle:20.0", alpha=0.2, seed=0,
+    ).build()
+    _, hist = exp.run(15)
+    assert hist["loss"][-1] > 0.2 * exp.problem.saddle_value
+
+
+# ------------------------- measured-δ feedback -----------------------------
+
+
+def test_measured_delta_pins_k_trajectory():
+    """δ-targeted control: measured δ̂ below target doubles k immediately
+    (no patience window); at/above target the schedule holds — the exact
+    k trajectory is pinned."""
+    comp = AdaptiveTopK(100, 5, 80, delta_target=0.6)
+    ks = []
+    for delta in (0.2, 0.3, 0.5, 0.7, 0.9, 0.9):
+        comp.schedule_update(grad_norm=1.0, measured_delta=delta)
+        ks.append(comp.k)
+    assert ks == [10, 20, 40, 40, 40, 40]
+    # wire cost follows the live k; the δ guarantee stays the k_min floor
+    assert comp.wire_bits(100) == 40 * (32 + 7)
+    assert comp.delta_bound(100) == pytest.approx(0.05)
+
+
+def test_channel_surfaces_measured_delta_end_to_end(paper_spec):
+    """The run history carries the uplink channel's per-round measured δ̂:
+    exactly 1.0 on an identity wire, in (0, 1] and ≥ the k/d bound's
+    energy floor under top-k."""
+    exp = paper_spec.replace(aggregator="norm_trim:0.2").build()
+    _, hist = exp.run(3)
+    assert hist["uplink_delta"] == [1.0, 1.0, 1.0]  # full-precision wire
+    exp_c = paper_spec.replace(aggregator="norm_trim:0.2",
+                               compressor="topk:0.5").build()
+    _, hist_c = exp_c.run(3)
+    assert all(0.0 < d <= 1.0 + 1e-6 for d in hist_c["uplink_delta"])
+    assert min(hist_c["uplink_delta"]) >= 0.5  # top-k keeps ≥ k/d energy
+
+
+def test_adaptive_k_consumes_measured_delta(paper_spec):
+    """An adaptive uplink whose target δ exceeds the initial k/d bound
+    must grow k during a run (the measured-δ feedback loop closing)."""
+    exp = paper_spec.replace(
+        aggregator="norm_trim:0.2", compressor="adaptive_topk:0.1:1.0",
+        error_feedback="none",
+    ).build()
+    comp = None
+    _, hist = exp.run(6)
+    comp = exp.algo.uplink.compressor
+    comp.delta_target = 0.99  # force the δ-grow path on the next updates
+    k0 = comp.k
+    exp.algo._maybe_adapt(1.0, measured_delta=0.1)
+    assert comp.k == min(2 * k0, comp.k_max)
+
+
+# ------------------------- facade misc -------------------------------------
+
+
+def test_experiment_bits_per_step_and_config_views():
+    spec = ExperimentSpec(problem="synthetic-logistic:400:10", m_workers=4,
+                          compressor="topk:0.5")
+    exp = spec.build()
+    bps = exp.bits_per_step()
+    assert bps["uplink"] == 4 * exp.algo.uplink.compressor.wire_bits(10)
+    ncfg = spec.to_newton_config()
+    assert ncfg.compressor == "topk:0.5" and ncfg.error_feedback == "ef21"
+    dcfg = spec.replace(runtime="mesh", problem="quadratic:8",
+                        error_feedback="ef21").to_distributed_config()
+    assert dcfg.error_feedback == "ef21"

@@ -53,7 +53,7 @@ def test_train_driver_under_attack():
     _, hist = run_training(
         arch="codeqwen1.5-7b", preset="smoke", steps=6, m_workers=4,
         per_worker_batch=2, seq_len=64, solver_iters=2,
-        attack="gaussian", alpha=0.25, beta=0.25, log_every=5,
+        attack="gaussian", alpha=0.25, beta=0.5, log_every=5,
     )
     assert hist[-1] < hist[0]
 
