@@ -134,6 +134,24 @@ def main(argv=None) -> None:
         )
     all_results["bits_to_eps"] = te
 
+    # ---- top-k kernel vs XLA at model scale -------------------------------
+    # d sweep scales with the budget: dryrun proves the gridded launch at
+    # CI speed; --full covers the ISSUE's 1.4k → 1M ladder (interpret mode
+    # off-TPU, so the derived column carries the mode flag)
+    kd = ((1408, 4096) if args.dryrun
+          else table1_communication.KERNEL_TIMING_DS if args.full
+          else (1408, 16_384, 131_072))
+    kt = table1_communication.run_kernel_timing(ds=kd)
+    for row in kt:
+        _emit(
+            f"topk_kernel/d={row['d']}",
+            row["kernel_us"],
+            f"plan={row['plan']} k={row['k']} "
+            f"xla_us={row['xla_topk_us']:.1f} "
+            f"interpret={row['interpret_mode']}",
+        )
+    all_results["topk_kernel_timing"] = kt
+
     # ---- Saddle escape (beyond-paper; Theorems 1-2 exercised directly) ----
     t0 = time.time()
     se = saddle_escape.run(T=25 if args.full else (5 if args.dryrun else 15))

@@ -16,11 +16,25 @@ within 2× the uncompressed round count), optionally compressing the
 downlink broadcast too; :func:`run_bits_to_eps` turns the same runs into
 a total-bits(up+down)-to-ε curve — the budget question "how many bits
 until ‖∇f‖ ≤ ε?" the rounds-only Table 1 cannot answer.
+
+Kernel: :func:`run_kernel_timing` times the fused Pallas top-k payload
+kernel (single-tile launch ≤ 1408, the sharded grid-over-blocks launch
+beyond) against the XLA ``lax.top_k``+gather path at model-scale d ∈
+{1.4k, 16k, 131k, 1M}, asserting bit-exact payload parity on every
+shape — off-TPU the kernel runs in interpret mode, so rows carry an
+``interpret_mode`` flag and the wall times answer "does it run at this
+scale" rather than "is it faster" there.
 """
 from __future__ import annotations
 
+import time
+
+import jax
+
 from repro.api import ExperimentSpec, problem_dim, to_attack_config
 from repro.core import ByzantinePGD, PGDConfig
+
+KERNEL_TIMING_DS = (1408, 16_384, 131_072, 1_000_000)
 
 ATTACKS = ("gaussian", "flipped_label", "negative", "random_label")
 
@@ -143,6 +157,55 @@ def run_compression(dataset="w8a", compressors=COMPRESSOR_SWEEP,
             base["total_bits"] / max(r["total_bits"], 1)
             if base else None
         )
+    return rows
+
+
+def run_kernel_timing(ds=KERNEL_TIMING_DS, ratio=0.1, repeats=3, seed=0):
+    """Fused top-k kernel vs the XLA ``lax.top_k`` path: wall time per
+    packed-payload call at model-scale d, with bit-exact parity asserted
+    on every shape (same values, same int32 indices — so the timing can
+    never drift away from the semantics it claims to speed up).
+
+    Each row reports the auto-selected launch plan (``single_tile`` ≤
+    1408, ``gridded`` beyond), the per-call microseconds for both paths,
+    and whether the kernel executed in interpret mode (any backend other
+    than TPU): interpret rows time the kernel's *semantics*, not its
+    silicon performance.
+    """
+    import numpy as np
+
+    from repro.kernels import kernel_plan, topk_compress
+    from repro.kernels.ref import topk_compress_ref
+
+    rows = []
+    for d in ds:
+        k = max(1, int(round(ratio * d)))
+        x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+        plan, tile = kernel_plan(d)
+        kern = jax.jit(lambda z, kk=k: topk_compress(z, kk))
+        xla = jax.jit(lambda z, kk=k: topk_compress_ref(z, kk))
+        v1, i1 = kern(x)
+        v2, i2 = xla(x)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+        def _time(f, z=x):
+            f(z)[0].block_until_ready()          # compiled above; re-warm
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                f(z)[0].block_until_ready()
+            return (time.perf_counter() - t0) / repeats * 1e6
+
+        rows.append({
+            "d": d,
+            "k": k,
+            "plan": plan,
+            "tile": tile,
+            "kernel_us": _time(kern),
+            "xla_topk_us": _time(xla),
+            "backend": jax.default_backend(),
+            "interpret_mode": jax.default_backend() != "tpu",
+        })
     return rows
 
 

@@ -35,7 +35,7 @@ from .attacks import (
     to_attack_config,
 )
 from .errors import SpecError
-from .experiment import KERNEL_TILE_MAX_D, Experiment, ExperimentSpec
+from .experiment import Experiment, ExperimentSpec
 from .problems import (
     PROBLEM_SPECS,
     Problem,
@@ -54,7 +54,6 @@ __all__ = [
     "Aggregator",
     "Experiment",
     "ExperimentSpec",
-    "KERNEL_TILE_MAX_D",
     "PROBLEM_SPECS",
     "Problem",
     "ResolvedAttack",

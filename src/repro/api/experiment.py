@@ -11,7 +11,7 @@ are plain JSON scalars, so
 and a sweep is just a list of dicts.  ``validate()`` runs every
 build-time check (β > α resilience precondition, spec-string grammar
 against the three registries, EF-vs-compressor compatibility, the
-top-k kernel's single-tile d limit) and raises
+top-k kernel's launch-plan/tile sanity) and raises
 :class:`~repro.api.errors.SpecError` with an actionable message;
 ``build()`` validates and returns a ready :class:`Experiment` runner
 covering both the paper-faithful and mesh runtimes.
@@ -33,10 +33,6 @@ from .aggregators import default_aggregator_spec, make_aggregator
 from .attacks import make_attack, to_attack_config
 from .errors import SpecError
 from .problems import fixed_workers, make_problem, problem_dim
-
-# single-tile Pallas top-k kernel: (d_pad, d_pad) f32 comparison tiles must
-# fit VMEM (~16 MB) next to the pack buffers ⇒ d ≲ 1.4k (ROADMAP item)
-KERNEL_TILE_MAX_D = 1408
 
 _PAPER_SOLVER_ITERS = 500   # Algorithm 2 while-loop cap (paper runtime)
 _MESH_SOLVER_ITERS = 4      # fixed inner iterations (static mesh program)
@@ -190,15 +186,20 @@ class ExperimentSpec:
                 make_compressor(spec, dim or 1024)
             except ValueError as e:
                 raise SpecError(f"{field}={spec!r}: {e}") from None
-            if spec.partition(":")[0] == "topk_kernel" and dim is not None \
-                    and dim > KERNEL_TILE_MAX_D:
-                raise SpecError(
-                    f"{field}={spec!r}: the fused top-k kernel is a "
-                    f"single-tile launch (d ≤ {KERNEL_TILE_MAX_D}; its "
-                    f"(d, d) pack tiles must fit VMEM) but "
-                    f"problem {self.problem!r} has d={dim} — use 'topk' "
-                    f"(the XLA path) for model-scale vectors"
-                )
+            if spec.partition(":")[0].endswith("_kernel"):
+                # the kernel path serves any d (single-tile launch up to
+                # 1408, the sharded grid beyond).  The remaining build-time
+                # check guards the kernel module's CONFIGURED tiling, not
+                # d: if DEFAULT_BLOCK ever drifts to something the TPU
+                # cannot serve (non-128-lane multiple, VMEM-oversized
+                # tiles), the spec fails here with an actionable message
+                # instead of deep inside a trace at run time.
+                from ..kernels import kernel_plan
+
+                try:
+                    kernel_plan(dim or 1024)
+                except ValueError as e:
+                    raise SpecError(f"{field}={spec!r}: {e}") from None
 
         # error feedback
         ef = self.resolved_error_feedback()

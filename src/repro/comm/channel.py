@@ -17,7 +17,12 @@ seed code hand-rolled twice with diverging semantics:
   *reconstructed* payloads (Byzantine workers send arbitrary bytes, so
   compression grants them no protection);
 * **exact wire accounting** — ``bits_per_round`` is a static Python int
-  the driver feeds a :class:`repro.comm.WireLedger`.
+  the driver feeds a :class:`repro.comm.WireLedger`.  The int comes from
+  the compressor's ``wire_bits``, which describes the PAYLOAD (k values +
+  k indices for sparsifiers), not the producing implementation — the
+  gridded Pallas top-k kernel's blocked slice layout re-arranges how the
+  payload is produced, never what crosses the wire, so ``topk_kernel``
+  and ``topk`` account identically for the same (d, k).
 
 Two layouts mirror the two runtimes:
 

@@ -14,6 +14,9 @@ Conventions
 * **downlink** — center→worker broadcast; the payload is counted ONCE per
   round (broadcast medium), not once per receiver.
 * ``rounds`` counts communication rounds (a Remark-5 step is two).
+* payload bits are implementation-independent: a compressor that
+  assembles its payload in blocks (the sharded top-k kernel) records the
+  same exact int as the single-tile/XLA path for the same (d, k).
 """
 from __future__ import annotations
 

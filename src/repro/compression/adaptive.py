@@ -42,9 +42,13 @@ class AdaptiveTopK(TopK):
     def __init__(self, d: int, k_min: int, k_max: int, *,
                  value_bits: int = 32, plateau_tol: float = 0.05,
                  shrink_tol: float = 0.5, patience: int = 3,
-                 delta_target: float = 0.5):
+                 delta_target: float = 0.5, use_kernel: bool = False):
         assert 1 <= k_min <= k_max <= d
-        super().__init__(k_min, value_bits=value_bits)
+        # use_kernel routes every compress through the fused Pallas path;
+        # k is a static argument of the (single-tile OR sharded) launch,
+        # so each schedule move re-traces the kernel at the new k — the
+        # owning runtime's rebuild-on-change contract covers both paths
+        super().__init__(k_min, value_bits=value_bits, use_kernel=use_kernel)
         self.d = int(d)
         self.k_min = int(k_min)
         self.k_max = int(k_max)

@@ -5,7 +5,10 @@ Configs carry compressors as frozen-dataclass-friendly *spec strings*:
     "none"          identity (full precision)
     "topk:0.1"      top-k, k = max(1, round(0.1·d))   (ratio form)
     "topk:32"       top-k, k = 32                     (absolute form)
-    "topk_kernel:r" top-k via the fused Pallas kernel
+    "topk_kernel:r" top-k via the fused Pallas kernel (single-tile
+                    launch for d ≤ 1408, sharded grid-over-blocks launch
+                    beyond — auto-selected by d, any model scale;
+                    bit-exact with "topk", identical wire bits)
     "randk:0.1"     random-k (same k grammar)
     "signnorm"      scaled sign, 1 bit/coordinate
     "int8"          block-wise int8, block = 128
@@ -15,6 +18,9 @@ Configs carry compressors as frozen-dataclass-friendly *spec strings*:
                     k_min = 0.05·d and k_max = 0.5·d (grad-norm plateau
                     grows k, fast progress shrinks it — see adaptive.py);
                     both bounds take the same ratio/absolute k grammar
+    "adaptive_topk_kernel:0.05:0.5"
+                    the same schedule over the fused Pallas kernel path
+                    (each k move re-traces the kernel launch)
 
 ``make_compressor(spec, d)`` resolves the string against the vector
 dimension d (needed to turn ratios into static k); passing an already-
@@ -31,7 +37,7 @@ from .sign import SignNorm
 from .sparsify import RandomK, TopK
 
 COMPRESSORS = ("none", "topk", "topk_kernel", "randk", "signnorm", "int8",
-               "adaptive_topk")
+               "adaptive_topk", "adaptive_topk_kernel")
 
 
 def _resolve_k(arg: str, d: int) -> int:
@@ -56,11 +62,12 @@ def make_compressor(
         return TopK(k, use_kernel=head == "topk_kernel")
     if head == "randk":
         return RandomK(_resolve_k(arg or "0.1", d))
-    if head == "adaptive_topk":
+    if head in ("adaptive_topk", "adaptive_topk_kernel"):
         lo, _, hi = arg.partition(":")
         k_min = _resolve_k(lo or "0.05", d)
         k_max = _resolve_k(hi or "0.5", d)
-        return AdaptiveTopK(d, min(k_min, k_max), max(k_min, k_max))
+        return AdaptiveTopK(d, min(k_min, k_max), max(k_min, k_max),
+                            use_kernel=head == "adaptive_topk_kernel")
     if head == "signnorm":
         return SignNorm()
     if head == "int8":

@@ -35,9 +35,14 @@ class TopK(_SparseCompressor):
     """Keep the k largest-magnitude coordinates (ties → lowest index).
 
     ``use_kernel=True`` routes compression through the fused Pallas
-    kernel :func:`repro.kernels.topk_compress` (threshold-select + pack
-    in one VMEM pass); the default is the ``jax.lax.top_k`` path, which
-    is what XLA fuses best off-TPU.
+    kernel :func:`repro.kernels.topk_compress`, which auto-selects its
+    launch by d: the single-tile threshold-select + pack up to
+    d = 1408, the sharded grid-over-coordinate-blocks launch (two-pass
+    radix-select global threshold) for model-scale vectors.  Both are
+    bit-exact with the default ``jax.lax.top_k`` path — same selected
+    support, same payload, same :meth:`wire_bits` — so the kernel flag
+    never changes accounted wire cost.  The default is the XLA path,
+    which is what XLA fuses best off-TPU.
     """
 
     def __init__(self, k: int, value_bits: int = 32, use_kernel: bool = False):

@@ -4,31 +4,44 @@
   (the prefill/train hot loop of every attention arch).
 * :mod:`cubic_step` — fused Algorithm-2 inner iteration for the paper's
   explicit-Hessian regime (the solver hot loop of the reproduction).
-* :mod:`topk_compress` — fused top-k compression payload (threshold
-  bisection + MXU pack), the wire hot-spot of repro.compression.
+* :mod:`topk_compress` — fused top-k compression payload, the wire
+  hot-spot of repro.compression: a single-tile launch (threshold
+  bisection + MXU pack) for d ≤ 1408 and a sharded grid-over-blocks
+  launch with a two-pass radix-select global threshold for model-scale
+  vectors; ``topk_compress`` auto-selects by d (``kernel_plan``).
 * :mod:`rmsnorm` — row-tiled RMSNorm.
 
 Each has a pure-jnp oracle in :mod:`ref` and a jit wrapper in :mod:`ops`;
 kernels run interpret=True off-TPU.
 """
 from .ops import (
+    DEFAULT_BLOCK,
+    SINGLE_TILE_MAX_D,
     attention_bshd,
     cubic_solve_fused,
     cubic_step,
     flash_attention,
+    kernel_plan,
     rmsnorm,
     rmsnorm_nd,
     topk_compress,
+    topk_compress_sharded,
+    topk_compress_tiled,
     topk_decompress,
 )
 
 __all__ = [
+    "DEFAULT_BLOCK",
+    "SINGLE_TILE_MAX_D",
     "attention_bshd",
     "cubic_solve_fused",
     "cubic_step",
     "flash_attention",
+    "kernel_plan",
     "rmsnorm",
     "rmsnorm_nd",
     "topk_compress",
+    "topk_compress_sharded",
+    "topk_compress_tiled",
     "topk_decompress",
 ]

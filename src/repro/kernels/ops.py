@@ -12,7 +12,15 @@ import jax.numpy as jnp
 from .cubic_step import cubic_solve_fused, cubic_step
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
-from .topk_compress import topk_compress, topk_decompress
+from .topk_compress import (
+    DEFAULT_BLOCK,
+    SINGLE_TILE_MAX_D,
+    kernel_plan,
+    topk_compress,
+    topk_compress_sharded,
+    topk_compress_tiled,
+    topk_decompress,
+)
 
 
 def attention_bshd(q, k, v, *, causal=True, window=0, **kw):
@@ -43,12 +51,17 @@ def rmsnorm_nd(x, w, **kw):
 
 
 __all__ = [
+    "DEFAULT_BLOCK",
+    "SINGLE_TILE_MAX_D",
     "attention_bshd",
     "cubic_solve_fused",
     "cubic_step",
     "flash_attention",
+    "kernel_plan",
     "rmsnorm",
     "rmsnorm_nd",
     "topk_compress",
+    "topk_compress_sharded",
+    "topk_compress_tiled",
     "topk_decompress",
 ]

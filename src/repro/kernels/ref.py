@@ -46,6 +46,40 @@ def topk_compress_ref(x, k):
     return x[idx], idx.astype(jnp.int32)
 
 
+def topk_compress_sharded_ref(x, k, block=512):
+    """Sharded oracle: the two-pass blocked contract of
+    :func:`repro.kernels.topk_compress_sharded`, spelled out in numpy-style
+    jnp (global threshold → sure/tie split → per-block tie budgets →
+    blocked pack → compaction) with NO kernels.  Must equal
+    :func:`topk_compress_ref` exactly — proving the blocked layout is a
+    pure re-arrangement that changes neither the selected support nor the
+    wire payload."""
+    import numpy as np
+
+    x = np.asarray(x, np.float32)
+    d = x.shape[-1]
+    mag = np.abs(x)
+    # exact global threshold: the k-th largest magnitude (fp32 total order)
+    t = np.sort(mag)[d - k]
+    sure = mag > t                          # strictly inside the top-k band
+    tie = mag == t                          # fill lowest-index-first
+    n_sure = int(sure.sum())
+    vals, idx = [], []
+    budget_left = k - n_sure                # global tie budget
+    for b0 in range(0, d, block):           # block order IS index order
+        blk = slice(b0, min(b0 + block, d))
+        tie_pos = np.nonzero(tie[blk])[0]
+        tie_budget = min(budget_left, len(tie_pos))  # this block's budget
+        keep = np.nonzero(sure[blk])[0].tolist()
+        keep += tie_pos[:tie_budget].tolist()
+        keep = sorted(keep)                 # per-block slice, index-ascending
+        budget_left -= tie_budget
+        idx += [b0 + j for j in keep]       # rebase to global coordinates
+        vals += [x[b0 + j] for j in keep]
+    assert len(idx) == k, "blocked budgets must pack exactly k survivors"
+    return jnp.asarray(vals, jnp.float32), jnp.asarray(idx, jnp.int32)
+
+
 def rmsnorm_ref(x, w, eps=1e-6):
     """x: (N, d), w: (d,).  Gemma-style (1+w) scaling, fp32 accumulation."""
     x32 = x.astype(jnp.float32)

@@ -1,11 +1,24 @@
-"""Pallas TPU kernel: fused top-k compression (threshold-select + pack).
+"""Pallas TPU kernels: fused top-k compression (threshold-select + pack).
 
 The XLA path for top-k compression is three kernels with HBM round-trips
 between them: ``top_k`` (a full sort on TPU), a gather, and a scatter at
-the receiver.  This kernel produces the packed wire payload — k values
-and k int32 indices in index-ascending order — in ONE VMEM-resident
-pass:
+the receiver.  The kernels here produce the packed wire payload — k
+values and k int32 indices in index-ascending order — without ever
+sorting.  Two launches cover every scale:
 
+* **single-tile** (d ≤ :data:`SINGLE_TILE_MAX_D`): the whole vector is
+  VMEM-resident and one launch does threshold-select (bisection on the
+  magnitude range) + pack (see below) — the paper's d ≤ a-few-k regime.
+* **sharded** (any d): a grid over coordinate blocks with a two-pass
+  global threshold — the model-scale path (see "Sharded launch" below).
+
+:func:`topk_compress` picks the launch by d; both are validated in
+interpret mode against :func:`repro.kernels.ref.topk_compress_ref` and
+agree with ``jax.lax.top_k`` bit-for-bit, including its tie rule
+(ties at the threshold magnitude keep the lowest indices).
+
+Single-tile launch
+------------------
 1. *threshold-select*: bisection on the magnitude range finds the
    largest t with |{i : |x_i| ≥ t}| ≥ k (a fori_loop of d-wide
    reductions; after ~64 halvings the interval is below fp32 spacing, so
@@ -17,11 +30,48 @@ pass:
    threshold band are always kept; ties at the threshold fill the
    remaining slots lowest-index-first (``lax.top_k``'s rule).
 
-Like :mod:`repro.kernels.cubic_step` this is a single-tile launch sized
-for the paper's d ≤ a few-k regime: VMEM holds two (d_pad, d_pad)
-iota-comparison tiles, so d_pad² · 4 B must fit in ~16 MB (d ≲ 1.4k).
+VMEM holds two (d_pad, d_pad) iota-comparison tiles, so d_pad² · 4 B
+must fit in ~16 MB ⇒ d ≲ 1.4k.
 
-Validated in interpret mode against :func:`repro.kernels.ref.topk_compress_ref`.
+Sharded launch
+--------------
+The two-pass global-threshold contract for model-scale vectors:
+
+* **pass 1 — per-block radix histograms.** The vector is split into
+  ``block``-wide coordinate blocks (a 1-D grid).  The fp32 bit pattern
+  of |x_i| is order-isomorphic to the magnitude (non-negative floats
+  compare like their int32 patterns; padding lanes are forced to the
+  sentinel −1 so they never count), so a radix-select over the 31
+  magnitude bits finds the EXACT bit pattern p of the k-th largest |x|:
+  each round a gridded kernel histograms the next ``nbits`` of every
+  in-prefix coordinate's pattern, and a host-visible reduction (plain
+  jnp on the (n_blocks, n_buckets) counts) walks the global histogram
+  from the top to pick the bucket holding the k-th magnitude.  Three
+  rounds (10 + 10 + 11 bits, :data:`_RADIX_ROUNDS`) resolve all 31
+  bits, so the threshold t = bitcast(p) is exact — no approximation,
+  ties are whole-magnitude classes, and parity with ``lax.top_k`` is
+  bit-exact.
+* **threshold → per-block budgets (host-visible reduction).**  With p
+  fixed, coordinates split into *sure* (pattern > p, all kept — fewer
+  than k by construction) and *ties* (pattern == p, filling the
+  remaining k − n_sure slots lowest-index-first, ``lax.top_k``'s rule).
+  Per-block tie budgets and pack offsets are exclusive prefix sums of
+  the per-block sure/tie counts — block order IS global index order, so
+  lowest-index-first across blocks falls out of the cumsum.
+* **pass 2 — per-block pack.**  Each grid step packs its block's
+  survivors (sure + first-``budget`` ties) into its slice of the
+  blocked wire payload using the same strict-lower-triangular-matvec
+  rank trick as the single-tile kernel, now on (block, block) tiles;
+  indices are rebased to global int32 coordinates.  A final fixed-shape
+  scatter compacts the blocked slices at their pack offsets into the
+  (k,) wire arrays — identical payload, identical wire bits: the
+  blocked layout transmits exactly k values + k indices, so
+  ``TopK.wire_bits`` (and the :class:`repro.comm.WireLedger` totals)
+  are unchanged relative to the single-tile/XLA paths.
+
+Per-launch VMEM is O(block²) regardless of d, so the default
+``block=512`` keeps every tile comfortably inside 16 MB at any model
+scale.
 """
 from __future__ import annotations
 
@@ -31,9 +81,42 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# single-tile launch: two (d_pad, d_pad) f32 comparison tiles must sit in
+# ~16 MB VMEM next to the pack buffers ⇒ d ≲ 1.4k; beyond it
+# topk_compress routes to the sharded grid automatically
+SINGLE_TILE_MAX_D = 1408
+# sharded launch: coordinate-block width (multiple of 128 lanes); the
+# largest pass-1/2 tiles are (block, 2048) and (block, block) f32
+DEFAULT_BLOCK = 512
+# radix-select rounds over the 31 bits of the |x| fp32 pattern:
+# (shift, nbits) — 10 + 10 + 11 bits resolve the threshold exactly
+_RADIX_ROUNDS = ((21, 10), (11, 10), (0, 11))
+
 
 def _round_up(n, mult):
     return -(-n // mult) * mult
+
+
+def kernel_plan(d: int, block: int = DEFAULT_BLOCK):
+    """Launch plan for a d-vector: ``("single_tile", d_pad)`` or
+    ``("gridded", block)``.  Raises ``ValueError`` for a block size the
+    TPU tiling cannot serve — the facade's build-time sanity check."""
+    if block % 128 != 0 or block <= 0:
+        raise ValueError(
+            f"top-k kernel block size must be a positive multiple of 128 "
+            f"lanes, got {block}"
+        )
+    # sharded-launch VMEM peaks: the (block, 2048) pass-1 histogram
+    # one-hot vs the three (block, block) pass-2 rank/select tiles (f32)
+    tile_bytes = 4 * max(block * 2048, 3 * block * block)
+    if tile_bytes > 14 * 2**20:
+        raise ValueError(
+            f"top-k kernel block={block} needs ~{tile_bytes >> 20} MB of "
+            f"VMEM tiles (> the ~14 MB budget) — use block ≤ 1024"
+        )
+    if d <= SINGLE_TILE_MAX_D:
+        return ("single_tile", _round_up(max(d, 1), 128))
+    return ("gridded", block)
 
 
 def _topk_kernel(x_ref, vals_ref, idx_ref, *, k, d, n_iter):
@@ -93,9 +176,9 @@ def _topk_kernel(x_ref, vals_ref, idx_ref, *, k, d, n_iter):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_iter", "interpret"))
-def topk_compress(x, k, *, n_iter=64, interpret=None):
-    """Packed top-|x| payload of a 1-D vector: (values (k,), indices (k,)),
-    index-ascending — the wire format of :class:`repro.compression.TopK`."""
+def topk_compress_tiled(x, k, *, n_iter=64, interpret=None):
+    """Single-tile launch (d ≤ :data:`SINGLE_TILE_MAX_D`): one VMEM-resident
+    threshold-select + pack pass over the whole vector."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     d = x.shape[-1]
@@ -118,6 +201,168 @@ def topk_compress(x, k, *, n_iter=64, interpret=None):
         interpret=interpret,
     )(xp)
     return vals[0, :k].astype(x.dtype), idx[0, :k]
+
+
+# ---------------------------------------------------------------------------
+# sharded launch: grid over coordinate blocks, two-pass global threshold
+# ---------------------------------------------------------------------------
+
+
+def _hist_kernel(patt_ref, prefix_ref, hist_ref, *, shift, nbits):
+    """Pass 1, one radix round: per-block bucket counts of the next
+    ``nbits`` of each in-prefix |x| bit pattern (padding = −1 never
+    matches any prefix: −1 >> s == −1 ≠ prefix ≥ 0)."""
+    patt = patt_ref[...]                                    # (1, B) int32
+    nbuckets = 1 << nbits
+    match = (patt >> (shift + nbits)) == prefix_ref[0, 0]
+    bucket = (patt >> shift) & (nbuckets - 1)
+    B = patt.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (B, nbuckets), 1)
+    onehot = (bucket.reshape(B, 1) == cols) & match.reshape(B, 1)
+    hist_ref[...] = jnp.sum(onehot.astype(jnp.int32), axis=0, keepdims=True)
+
+
+def _pack_kernel(x_ref, patt_ref, thresh_ref, budget_ref, vals_ref, idx_ref,
+                 *, block):
+    """Pass 2: pack this block's survivors — all sure coordinates
+    (pattern > p) plus the first ``budget`` ties (pattern == p),
+    lowest-index-first — into its slice of the blocked wire payload,
+    via the strict-lower-triangular-matvec rank trick per tile."""
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                      # (1, B)
+    patt = patt_ref[...]
+    p = thresh_ref[0, 0]
+    budget = budget_ref[0, 0].astype(jnp.float32)
+    B = block
+    sure = (patt > p).astype(jnp.float32)                   # (1, B)
+    tie = (patt == p).astype(jnp.float32)
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (B, B), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (B, B), 1)
+    lt = (ii < jj).astype(jnp.float32)
+
+    def rank_of(sel):                                       # # selected before j
+        return jax.lax.dot_general(
+            sel, lt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    keep = sure + tie * (rank_of(tie) < budget).astype(jnp.float32)
+    rank = rank_of(keep)
+    W = vals_ref.shape[1]
+    slot = jax.lax.broadcasted_iota(jnp.float32, (B, W), 1)
+    sel = (rank.reshape(B, 1) == slot).astype(jnp.float32) * keep.reshape(B, 1)
+
+    def gather(row):                                        # (1, B) @ (B, W)
+        return jax.lax.dot_general(
+            row, sel, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    # local positions stay < B ≤ 2^24 (exact in f32); rebasing to global
+    # int32 AFTER the matmul keeps the kernel exact at any d
+    lpos = jax.lax.broadcasted_iota(jnp.float32, (1, B), 1)
+    vals_ref[...] = gather(x)
+    idx_ref[...] = jnp.round(gather(lpos)).astype(jnp.int32) + i * B
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_compress_sharded(x, k, *, block=DEFAULT_BLOCK, interpret=None):
+    """Sharded launch: grid over ``block``-wide coordinate blocks with the
+    two-pass global threshold (module docstring, "Sharded launch") —
+    model-scale vectors, O(block²) VMEM per grid step, any d."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d = x.shape[-1]
+    assert x.ndim == 1 and 1 <= k <= d
+    kernel_plan(d, block)                                   # block sanity
+    nb = _round_up(d, block) // block
+    xp = jnp.pad(x.astype(jnp.float32), (0, nb * block - d)).reshape(nb, block)
+    # |x| fp32 bit patterns compare like magnitudes (non-negative floats);
+    # padding lanes get the sentinel −1 so no kernel needs a valid mask
+    patt = jax.lax.bitcast_convert_type(jnp.abs(xp), jnp.int32)
+    gpos = jnp.arange(nb * block, dtype=jnp.int32).reshape(nb, block)
+    patt = jnp.where(gpos < d, patt, -1)
+
+    # -- pass 1: radix-select the exact bit pattern p of the k-th |x| ----
+    prefix = jnp.zeros((1, 1), jnp.int32)
+    n_above = jnp.int32(0)                  # count strictly above the prefix
+    for shift, nbits in _RADIX_ROUNDS:
+        nbuckets = 1 << nbits
+        hist = pl.pallas_call(
+            functools.partial(_hist_kernel, shift=shift, nbits=nbits),
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((1, block), lambda i: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, nbuckets), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((nb, nbuckets), jnp.int32),
+            interpret=interpret,
+        )(patt, prefix)
+        # host-visible reduction: walk the global histogram from the top
+        g = jnp.sum(hist, axis=0)
+        S = jnp.cumsum(g[::-1])[::-1]                # S[q] = count(≥ bucket q)
+        in_band = (n_above + S) >= k
+        q = jnp.max(jnp.where(in_band,
+                              jnp.arange(nbuckets, dtype=jnp.int32), -1))
+        n_above = n_above + S[q] - g[q]
+        prefix = (prefix << nbits) | q
+    p = prefix                                       # (1, 1): exact pattern
+
+    # -- threshold → per-block tie budgets and pack offsets --------------
+    sure_b = jnp.sum(patt > p[0, 0], axis=1)
+    tie_b = jnp.sum(patt == p[0, 0], axis=1)
+    n_sure = jnp.sum(sure_b)
+    tie_before = jnp.cumsum(tie_b) - tie_b           # block order = index order
+    budget_b = jnp.clip(k - n_sure - tie_before, 0, tie_b).astype(jnp.int32)
+    count_b = (sure_b + budget_b).astype(jnp.int32)
+    base_b = (jnp.cumsum(count_b) - count_b).astype(jnp.int32)
+
+    # -- pass 2: pack each block's survivors into the blocked payload ----
+    W = min(block, _round_up(k, 128))                # per-block slice width
+    vals, idx = pl.pallas_call(
+        functools.partial(_pack_kernel, block=block),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, W), jnp.float32),
+            jax.ShapeDtypeStruct((nb, W), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, patt, p, budget_b.reshape(nb, 1))
+
+    # compact the blocked slices at their offsets into the (k,) wire
+    # arrays (Σ count_b == k exactly, so every slot is written once)
+    wpos = jnp.arange(W, dtype=jnp.int32)[None, :]
+    tgt = jnp.where(wpos < count_b[:, None], base_b[:, None] + wpos, k)
+    vals_out = jnp.zeros((k,), jnp.float32).at[tgt.ravel()].set(
+        vals.ravel(), mode="drop")
+    idx_out = jnp.zeros((k,), jnp.int32).at[tgt.ravel()].set(
+        idx.ravel(), mode="drop")
+    return vals_out.astype(x.dtype), idx_out
+
+
+def topk_compress(x, k, *, n_iter=64, interpret=None, block=DEFAULT_BLOCK):
+    """Packed top-|x| payload of a 1-D vector: (values (k,), indices (k,)),
+    index-ascending — the wire format of :class:`repro.compression.TopK`.
+
+    Auto-selects the launch by d (:func:`kernel_plan`): the single-tile
+    kernel up to :data:`SINGLE_TILE_MAX_D`, the sharded grid beyond it.
+    Both agree with ``jax.lax.top_k`` bit-for-bit."""
+    plan, _ = kernel_plan(x.shape[-1], block)
+    if plan == "single_tile":
+        return topk_compress_tiled(x, k, n_iter=n_iter, interpret=interpret)
+    return topk_compress_sharded(x, k, block=block, interpret=interpret)
 
 
 def topk_decompress(vals, idx, d):

@@ -65,6 +65,32 @@ def test_wire_ledger_exact_beyond_float32():
     assert ledger.total_bits == 0 and ledger.rounds == 0
 
 
+def test_ledger_blocked_kernel_payload_bits_exact():
+    """The gridded topk_kernel's blocked payload layout must not change
+    accounted wire cost: WireLedger uplink bits for a topk_kernel
+    transmit equal the single-tile/XLA topk bits for the same (d, k),
+    at small d (single-tile launch) and model-scale d (sharded launch)."""
+    for d, m in ((1000, 4), (4096, 4), (65536, 2)):
+        ch_k = VectorChannel("uplink", "topk_kernel:0.1", d, m)
+        ch_x = VectorChannel("uplink", "topk:0.1", d, m)
+        assert ch_k.bits_per_round() == ch_x.bits_per_round()
+        led_k, led_x = WireLedger(), WireLedger()
+        for _ in range(3):
+            ch_k.record(led_k)
+            ch_x.record(led_x)
+        assert led_k.uplink_bits == led_x.uplink_bits
+        assert isinstance(led_k.uplink_bits, int)
+    # the accounted payload is what actually crosses the wire: k values
+    # + k int32-indexed coordinates out of the kernel's blocked pack
+    d = 4096
+    ch_k = VectorChannel("uplink", "topk_kernel:0.1", d, 1)
+    vals, idx = ch_k.compressor.compress(jax.random.normal(
+        jax.random.PRNGKey(0), (d,)))
+    k = ch_k.compressor.k
+    assert vals.shape == (k,) and idx.shape == (k,)
+    assert ch_k.bits_per_round() == k * (32 + 12)  # 12 index bits at 4096
+
+
 def test_vector_channel_bits_per_round():
     up = VectorChannel("uplink", "topk:0.5", 10, 4)
     down = VectorChannel("downlink", None, 10, 1)

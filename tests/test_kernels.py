@@ -6,11 +6,15 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
+    DEFAULT_BLOCK,
+    SINGLE_TILE_MAX_D,
     attention_bshd,
     cubic_step,
     flash_attention,
+    kernel_plan,
     rmsnorm,
     topk_compress,
+    topk_compress_sharded,
     topk_decompress,
 )
 from repro.kernels.cubic_step import cubic_solve_fused
@@ -19,6 +23,7 @@ from repro.kernels.ref import (
     flash_attention_ref,
     rmsnorm_ref,
     topk_compress_ref,
+    topk_compress_sharded_ref,
 )
 from repro.core import solve_cubic_exact
 
@@ -151,6 +156,106 @@ def test_topk_compress_vmap(rng):
     assert vs.shape == (4, 30) and idxs.shape == (4, 30)
     ref = jax.vmap(lambda z: topk_compress_ref(z, 30)[0])(xs)
     np.testing.assert_allclose(vs, ref, atol=1e-6)
+
+
+# ------------------- sharded (gridded) top-k kernel -----------------------
+
+_B = DEFAULT_BLOCK
+
+
+def _assert_payload_parity(x, k, **kw):
+    """Gridded kernel == lax.top_k oracle == blocked two-pass oracle,
+    bit-for-bit (selected support, packed order, values)."""
+    v, i = topk_compress_sharded(x, k, **kw)
+    vr, ir = topk_compress_ref(x, k)
+    np.testing.assert_array_equal(i, ir)
+    np.testing.assert_array_equal(v, vr)
+    vb, ib = topk_compress_sharded_ref(x, k, kw.get("block", _B))
+    np.testing.assert_array_equal(ib, ir)
+    np.testing.assert_array_equal(vb, vr)
+
+
+@pytest.mark.parametrize("d", [_B - 1, _B, _B + 1, 1408, 1409, 4096, 65536])
+@pytest.mark.parametrize("kind", ["first", "tenth", "last"])
+def test_topk_sharded_oracle_sweep(d, kind, rng):
+    """ISSUE sweep: gridded kernel parity at the block boundaries, the
+    single-tile limit and beyond, k at both extremes and in between."""
+    k = {"first": 1, "tenth": max(1, d // 10), "last": d - 1}[kind]
+    x = jax.random.normal(jax.random.fold_in(rng, d * 7 + k), (d,))
+    _assert_payload_parity(x, k)
+
+
+@pytest.mark.parametrize("d", [_B - 1, _B + 1, 3000])
+def test_topk_sharded_duplicate_magnitudes(d, rng):
+    """Quantized magnitudes force many threshold ties; the tie class must
+    fill lowest-index-first ACROSS blocks (lax.top_k's rule)."""
+    x = jnp.round(jax.random.normal(jax.random.fold_in(rng, d), (d,)) * 2) / 2
+    for k in (1, d // 3, d - 1):
+        _assert_payload_parity(x, k)
+
+
+def test_topk_sharded_all_zero_and_constant():
+    # all-zero: every coordinate ties at t = 0 → keep the lowest indices
+    for x in (jnp.zeros(3 * _B + 5), jnp.ones(3 * _B + 5)):
+        v, i = topk_compress_sharded(x, 7)
+        np.testing.assert_array_equal(i, jnp.arange(7))
+        np.testing.assert_array_equal(v, x[:7])
+
+
+def test_topk_sharded_negative_heavy(rng):
+    """Values carry their sign through the pack; magnitude ordering only."""
+    x = -jnp.abs(jax.random.normal(rng, (2 * _B + 17,))) - 0.5
+    _assert_payload_parity(x, _B // 2)
+    assert float(topk_compress_sharded(x, 5)[0].max()) < 0
+
+
+def test_topk_sharded_sparse_high_index_survivors():
+    # fewer nonzeros than k, the nonzero far from block 0: zero-ties fill
+    # from index 0, the lone survivor keeps its global index
+    d = 4 * _B
+    xs = jnp.zeros(d).at[d - 3].set(9.0)
+    _assert_payload_parity(xs, 3)
+
+
+def test_topk_sharded_block_width_invariance(rng):
+    """The packed payload must not depend on the launch's block width."""
+    x = jax.random.normal(rng, (3000,))
+    v1, i1 = topk_compress_sharded(x, 300, block=128)
+    v2, i2 = topk_compress_sharded(x, 300, block=1024)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(v1, v2)
+
+
+def test_topk_auto_select_dispatch(rng):
+    """topk_compress routes by d: single-tile to the limit, gridded past
+    it — and both sides of the boundary agree with the oracle."""
+    assert kernel_plan(SINGLE_TILE_MAX_D)[0] == "single_tile"
+    assert kernel_plan(SINGLE_TILE_MAX_D + 1)[0] == "gridded"
+    for d in (SINGLE_TILE_MAX_D, SINGLE_TILE_MAX_D + 1):
+        x = jax.random.normal(jax.random.fold_in(rng, d), (d,))
+        v, i = topk_compress(x, 140)
+        vr, ir = topk_compress_ref(x, 140)
+        np.testing.assert_array_equal(i, ir)
+        np.testing.assert_array_equal(v, vr)
+
+
+def test_topk_sharded_vmap(rng):
+    """Worker-stacked compression (the TreeChannel layout) over the
+    gridded launch."""
+    xs = jax.random.normal(rng, (3, 2000))
+    vs, idxs = jax.jit(jax.vmap(lambda z: topk_compress_sharded(z, 64)))(xs)
+    assert vs.shape == (3, 64) and idxs.shape == (3, 64)
+    for b in range(3):
+        vr, ir = topk_compress_ref(xs[b], 64)
+        np.testing.assert_array_equal(idxs[b], ir)
+        np.testing.assert_array_equal(vs[b], vr)
+
+
+def test_kernel_plan_rejects_bad_blocks():
+    with pytest.raises(ValueError, match="multiple of 128"):
+        kernel_plan(4096, block=100)
+    with pytest.raises(ValueError, match="VMEM"):
+        kernel_plan(4096, block=4096)
 
 
 @pytest.mark.parametrize("N,d", [(128, 256), (256, 512), (64, 1024)])
