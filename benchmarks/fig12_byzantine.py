@@ -1,56 +1,64 @@
-"""Figs. 1 & 2 — Byzantine experiments, now an aggregator × attack grid.
+"""Figs. 1 & 2 — Byzantine experiments, an aggregator × attack grid.
 
 Fig. 1: robust-regression training loss; Fig. 2: logistic test accuracy —
 under the four §6 attacks at α ∈ {10%, 15%, 20%}, m=20, M=10, η=1 (the
 paper's settings).  The paper's rule is ``norm_trim`` at β = α + 2/m;
 ``aggregators`` sweeps the registry rules against every attack (the
-norm_trim-vs-krum-vs-trimmed_mean comparison), each scenario built
-through one :class:`repro.api.ExperimentSpec`.
+norm_trim-vs-krum-vs-trimmed_mean comparison).
+
+A thin view over :mod:`repro.sweep`: the grid (shared with the
+``fig12`` CLI preset, so a store produced by ``python -m repro.sweep
+run --preset fig12`` has the same cell hashes and serves this benchmark
+with zero new builds) is planned, run through the sweep engine, and
+pivoted out of the result store.  Bare aggregator heads resolve to the
+paper's per-α strengths inside the planner
+(:func:`repro.sweep.paper_strengths`).
 """
 from __future__ import annotations
 
-from repro.api import ExperimentSpec
+from repro.sweep import ResultStore, fig12_grid, plan_grid, run_plan
+from repro.sweep.grids import FIG12_ATTACKS
 
-ATTACKS = ("flipped_label", "negative", "gaussian", "random_label")
+ATTACKS = FIG12_ATTACKS
 ALPHAS = (0.10, 0.15, 0.20)
-# registry aggregators to pit against each attack; "norm_trim" is resolved
-# per-α to the paper's β = α + 2/m
 AGGREGATORS = ("norm_trim", "krum", "trimmed_mean")
 
 
-def _aggregator_spec(agg: str, alpha: float, m: int) -> str:
-    """Per-α registry spec for a sweep entry (paper-faithful strengths)."""
-    if agg == "norm_trim":
-        return f"norm_trim:{alpha + 2.0 / m}"
-    if agg == "krum":
-        return f"krum:{int(alpha * m)}"
-    if agg == "trimmed_mean":
-        return f"trimmed_mean:{alpha + 1.0 / m}"
-    return agg   # "mean" / "coordinate_median" take no strength
-
-
 def run(T=15, datasets=("a9a", "w8a"), attacks=ATTACKS, alphas=ALPHAS,
-        aggregators=AGGREGATORS, seed=0):
+        aggregators=AGGREGATORS, seed=0, store_path=None):
+    axes, base = fig12_grid(n_steps=T, datasets=datasets, attacks=attacks,
+                            alphas=alphas, aggregators=aggregators,
+                            seed=seed)
+    store = ResultStore(store_path)
+    plan = plan_grid(axes, base)
+    # the figure's own grid must plan clean — a pruned cell here means the
+    # caller asked for an un-coverable scenario (the old loud SpecError)
+    if plan.skipped:
+        raise RuntimeError(
+            f"fig12 grid: {len(plan.skipped)} cells skipped at plan time: "
+            + "; ".join(s["reason"] for s in plan.skipped[:3])
+        )
+    # retries: a transiently failed or budget-truncated cell cached in a
+    # persistent store must not permanently brick the figure
+    run_plan(plan, store, retry_failed=True, retry_truncated=True)
     results = {}
-    m = 20  # paper's cluster size (fixed by the workloads)
-    for ds in datasets:
-        for attack in attacks:
-            for alpha in alphas:
-                for agg in aggregators:
-                    spec = _aggregator_spec(agg, alpha, m)
-                    base = ExperimentSpec(
-                        problem=f"{ds}-logistic", M=10.0, eta=1.0,
-                        aggregator=spec, attack=attack, alpha=alpha,
-                        seed=seed,
-                    )
-                    # Fig. 2: logistic accuracy
-                    _, hist = base.build().run(T)
-                    key = f"{ds}/{attack}/alpha={alpha:g}/{agg}"
-                    results[f"fig2/{key}"] = {"accuracy": hist["eval"]}
-
-                    # Fig. 1: robust-regression loss
-                    _, hist = base.replace(
-                        problem=f"{ds}-robust"
-                    ).build().run(T)
-                    results[f"fig1/{key}"] = {"loss": hist["loss"]}
+    # pivot only THIS plan's cells — a reused store may hold other grids —
+    # and refuse to render a figure with holes (failed or truncated cells
+    # cached by an earlier run against the same store)
+    for rec in (store.get(h) for h in plan.hashes()):
+        if rec["status"] != "ok" or rec["metrics"].get("truncated"):
+            raise RuntimeError(
+                f"fig12 sweep cell {rec['hash']} "
+                f"{'truncated' if rec['status'] == 'ok' else rec['status']}: "
+                f"{rec.get('error', 'rerun without --budget-s')}"
+                + (f" (store: {store_path})" if store_path else "")
+            )
+        spec, metrics = rec["spec"], rec["metrics"]
+        ds, _, kind = spec["problem"].partition("-")
+        agg = spec["aggregator"].partition(":")[0]
+        key = (f"{ds}/{spec['attack']}/alpha={spec['alpha']:g}/{agg}")
+        if kind == "logistic":
+            results[f"fig2/{key}"] = {"accuracy": metrics["eval"]}
+        else:
+            results[f"fig1/{key}"] = {"loss": metrics["loss"]}
     return results

@@ -2,30 +2,53 @@
 
 Top row: logistic-regression test accuracy on the a9a/w8a twins for
 M ∈ {10, 15, 20}; bottom row: robust-regression training loss.
-Paper protocol: m=20 workers, η=1, λ=1.  Every run builds through the
-:class:`repro.api.ExperimentSpec` facade.
+Paper protocol: m=20 workers, η=1, λ=1.
+
+A thin view over :mod:`repro.sweep`: the (problem × M) grid is planned
+once, run through the sweep engine (pass ``store_path`` to make the run
+resumable — re-running skips every stored cell), and the figure series
+are pivoted straight out of the result store.
 """
 from __future__ import annotations
 
-from repro.api import ExperimentSpec
+from repro.sweep import ResultStore, fig3_grid, plan_grid, run_plan
 
 
-def run(T=15, datasets=("a9a", "w8a"), Ms=(10.0, 15.0, 20.0), seed=0):
+def run(T=15, datasets=("a9a", "w8a"), Ms=(10.0, 15.0, 20.0), seed=0,
+        store_path=None):
+    axes, base = fig3_grid(n_steps=T, datasets=datasets, Ms=Ms, seed=seed)
+    store = ResultStore(store_path)
+    plan = plan_grid(axes, base)
+    # the figure's own grid must plan clean — a pruned cell here means the
+    # caller asked for an un-coverable scenario (the old loud SpecError)
+    if plan.skipped:
+        raise RuntimeError(
+            f"fig3 grid: {len(plan.skipped)} cells skipped at plan time: "
+            + "; ".join(s["reason"] for s in plan.skipped[:3])
+        )
+    # retries: a transiently failed or budget-truncated cell cached in a
+    # persistent store must not permanently brick the figure
+    run_plan(plan, store, retry_failed=True, retry_truncated=True)
     results = {}
-    for ds in datasets:
-        for M in Ms:
-            exp = ExperimentSpec(
-                problem=f"{ds}-logistic", M=M, aggregator="mean", seed=seed
-            ).build()
-            _, hist = exp.run(T)
-            results[f"logistic/{ds}/M={M:g}"] = {
-                "accuracy": hist["eval"],
-                "loss": hist["loss"],
+    # pivot only THIS plan's cells — a reused store may hold other grids —
+    # and refuse to render a figure with holes (failed or truncated cells
+    # cached by an earlier run against the same store)
+    for rec in (store.get(h) for h in plan.hashes()):
+        if rec["status"] != "ok" or rec["metrics"].get("truncated"):
+            raise RuntimeError(
+                f"fig3 sweep cell {rec['hash']} "
+                f"{'truncated' if rec['status'] == 'ok' else rec['status']}: "
+                f"{rec.get('error', 'rerun without --budget-s')}"
+                + (f" (store: {store_path})" if store_path else "")
+            )
+        spec, metrics = rec["spec"], rec["metrics"]
+        ds, _, kind = spec["problem"].partition("-")
+        key = f"{ds}/M={spec['M']:g}"
+        if kind == "logistic":
+            results[f"logistic/{key}"] = {
+                "accuracy": metrics["eval"],
+                "loss": metrics["loss"],
             }
-
-            exp = ExperimentSpec(
-                problem=f"{ds}-robust", M=M, aggregator="mean", seed=seed
-            ).build()
-            _, hist = exp.run(T)
-            results[f"robustreg/{ds}/M={M:g}"] = {"loss": hist["loss"]}
+        else:
+            results[f"robustreg/{key}"] = {"loss": metrics["loss"]}
     return results

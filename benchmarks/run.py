@@ -28,7 +28,16 @@ def main(argv=None) -> None:
                          "benchmark entry (CI runs this so they can't rot)")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--out", default="results/benchmarks.json")
+    ap.add_argument("--sweep-store-dir", default=None,
+                    help="persist the fig3/fig12 sweeps as resumable "
+                         "stores under this dir (re-runs skip stored "
+                         "cells); default: in-memory")
     args = ap.parse_args(argv)
+
+    def _store(name):
+        if args.sweep_store_dir is None:
+            return None
+        return os.path.join(args.sweep_store_dir, f"{name}.jsonl")
 
     from . import (
         fig3_convergence,
@@ -45,10 +54,11 @@ def main(argv=None) -> None:
     all_results = {}
     print("name,us_per_call,derived")
 
-    # ---- Fig. 3: non-Byzantine convergence -------------------------------
+    # ---- Fig. 3: non-Byzantine convergence (sweep-engine backed) ---------
     t0 = time.time()
     r3 = fig3_convergence.run(T=T, datasets=datasets,
-                              Ms=(10.0, 15.0, 20.0) if args.full else (10.0,))
+                              Ms=(10.0, 15.0, 20.0) if args.full else (10.0,),
+                              store_path=_store("fig3"))
     n_rounds = sum(len(v.get("loss", [])) for v in r3.values())
     for k, v in r3.items():
         derived = (f"final_acc={v['accuracy'][-1]:.4f}" if "accuracy" in v
@@ -56,7 +66,7 @@ def main(argv=None) -> None:
         _emit(f"fig3/{k}", (time.time() - t0) / max(n_rounds, 1) * 1e6, derived)
     all_results["fig3"] = r3
 
-    # ---- Figs. 1 & 2: Byzantine attacks ----------------------------------
+    # ---- Figs. 1 & 2: Byzantine attacks (sweep-engine backed) ------------
     t0 = time.time()
     r12 = fig12_byzantine.run(
         T=T, datasets=datasets,
@@ -64,6 +74,7 @@ def main(argv=None) -> None:
         if args.full else (("gaussian",) if args.dryrun
                            else ("flipped_label", "gaussian")),
         alphas=(0.10, 0.15, 0.20) if args.full else (0.20,),
+        store_path=_store("fig12"),
     )
     n_rounds = sum(len(v.get("loss", v.get("accuracy", []))) for v in r12.values())
     for k, v in r12.items():

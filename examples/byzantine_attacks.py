@@ -2,29 +2,21 @@
 paper's norm-trim vs krum vs trimmed-mean, the contrast that motivates the
 paper — on the non-convex robust-regression objective (Eq. 9).
 
-Each (attack × aggregator) cell is one declarative
-:class:`repro.api.ExperimentSpec`; the sweep is literally a loop over the
-registry spec strings.
+The (attack × aggregator) grid is planned, executed, and pivoted by
+:mod:`repro.sweep`: one ``plan_grid`` call replaces the hand-rolled
+loop, per-α strengths come from the planner's ``paper_strengths``
+resolve hook, combos a rule cannot cover are skipped at plan time with
+a recorded reason (shown as ``n/a``), and the norm-trim parameter error
+‖w − w*‖/‖w*‖ is the engine's stored ``w_err`` metric.
 
     PYTHONPATH=src python examples/byzantine_attacks.py [--rounds N]
 """
 import argparse
 
-import jax.numpy as jnp
-
-from repro.api import ExperimentSpec, SpecError
+from repro.sweep import ResultStore, plan_grid, run_plan
 
 ATTACKS = ("gaussian:50.0", "negative", "flipped_label", "random_label")
-
-
-def aggregator_sweep(m: int, alpha: float):
-    """Registry spec strings swept per attack (strengths set from α)."""
-    return (
-        ("mean", "mean"),                                    # naive baseline
-        ("norm_trim", f"norm_trim:{alpha + 2.0 / m}"),       # the paper
-        ("krum", f"krum:{int(alpha * m)}"),
-        ("trimmed_mean", f"trimmed_mean:{alpha + 1.0 / m}"),
-    )
+AGGREGATORS = ("mean", "norm_trim", "krum", "trimmed_mean")
 
 
 def main(argv=None):
@@ -33,34 +25,41 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=0.2)
     args = ap.parse_args(argv)
 
-    m, alpha, T = 20, args.alpha, args.rounds
-    sweep = aggregator_sweep(m, alpha)
-    base = ExperimentSpec(
-        problem="synthetic-regression:8000:40", m_workers=m, M=10.0,
-        alpha=alpha, seed=1,
+    plan = plan_grid(
+        axes={"attack": list(ATTACKS), "aggregator": list(AGGREGATORS)},
+        base={"problem": "synthetic-regression:8000:40", "m_workers": 20,
+              "M": 10.0, "alpha": args.alpha, "seed": 1,
+              "n_steps": args.rounds},
     )
+    store = ResultStore()
+    run_plan(plan, store)
 
-    header = " | ".join(f"{name:>12s}" for name, _ in sweep)
+    cell = {}      # (attack head, aggregator head) -> record (any status)
+    for rec in store.records():
+        spec = rec["spec"]
+        cell[(spec["attack"].partition(":")[0],
+              spec["aggregator"].partition(":")[0])] = rec
+
+    header = " | ".join(f"{name:>12s}" for name in AGGREGATORS)
     print(f"{'attack':>15s} | {header} | norm-trim err")
-    print("-" * (20 + 16 * len(sweep)))
+    print("-" * (20 + 16 * len(AGGREGATORS)))
     for attack in ATTACKS:
+        head = attack.partition(":")[0]
         cells, err = [], float("nan")
-        for name, agg_spec in sweep:
-            try:
-                exp = base.replace(attack=attack, aggregator=agg_spec).build()
-            except SpecError:
-                # this rule can't cover the requested α at m=20 (e.g.
-                # krum at α near the boundary) — report, keep sweeping
+        for agg in AGGREGATORS:
+            rec = cell.get((head, agg))
+            if rec is None:
+                # skipped at plan time (rule can't cover this α at m=20)
                 cells.append(f"{'n/a':>12s}")
                 continue
-            w, hist = exp.run(T)
-            cells.append(f"{hist['loss'][-1]:12.4f}")
-            if name == "norm_trim":
-                w_star = exp.problem.w_star
-                err = float(jnp.linalg.norm(w - w_star)
-                            / jnp.linalg.norm(w_star))
-        print(f"{attack.partition(':')[0]:>15s} | {' | '.join(cells)} | "
-              f"{err:.3f}")
+            if rec["status"] != "ok":
+                # built but died at run time — not the same thing as n/a
+                cells.append(f"{'failed':>12s}")
+                continue
+            cells.append(f"{rec['metrics']['loss'][-1]:12.4f}")
+            if agg == "norm_trim":
+                err = rec["metrics"].get("w_err", float("nan"))
+        print(f"{head:>15s} | {' | '.join(cells)} | {err:.3f}")
 
 
 if __name__ == "__main__":

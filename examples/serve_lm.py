@@ -1,7 +1,10 @@
 """Batched serving example: prefill + greedy decode through the KV-cache
 path (the decode_32k / long_500k dry-run shapes exercise this same code).
+Param distribution rides the downlink TreeChannel — ``--downlink int8``
+quantizes the broadcast and prints its exact ledger bits.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b --gen 48
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b --gen 48 \
+        --downlink int8
 """
 import argparse
 
@@ -14,8 +17,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--downlink", default="int8",
+                    help="param-broadcast compressor spec (e.g. 'int8', "
+                         "'topk:0.1'); pass '' for the full-precision wire")
     args = ap.parse_args()
-    run_serving(args.arch, "smoke", args.batch, args.prompt_len, args.gen)
+    run_serving(args.arch, "smoke", args.batch, args.prompt_len, args.gen,
+                downlink=args.downlink or None)
 
 
 if __name__ == "__main__":

@@ -329,19 +329,28 @@ class Experiment:
 
     # -- running ---------------------------------------------------------
     def run(self, n_steps: int = 10, *, grad_tol: Optional[float] = None,
-            eval_fn=None, key=None):
-        """Run the experiment; returns ``(iterate, history)``."""
+            eval_fn=None, key=None, deadline: Optional[float] = None):
+        """Run the experiment; returns ``(iterate, history)``.
+
+        ``deadline`` is a ``time.monotonic()`` timestamp: the run loop
+        cooperatively stops at the first round boundary past it (the
+        sweep runner's per-cell wall-time budget), recording
+        ``history["truncated"] = True``.
+        """
         if self.algo is not None:
             return self.algo.run(
                 self.problem.w0, self.problem.X_workers,
                 self.problem.y_workers, n_steps, key=key,
                 eval_fn=eval_fn if eval_fn is not None
                 else self.problem.eval_fn,
-                grad_tol=grad_tol,
+                grad_tol=grad_tol, deadline=deadline,
             )
-        return self._run_mesh(n_steps, key=key)
+        return self._run_mesh(n_steps, key=key, deadline=deadline)
 
-    def _run_mesh(self, n_steps: int, key=None):
+    def _run_mesh(self, n_steps: int, key=None,
+                  deadline: Optional[float] = None):
+        import time as _time
+
         import jax
 
         from ..comm import WireLedger
@@ -352,8 +361,12 @@ class Experiment:
         ledger = WireLedger()
         wire = self._raw_step.wire_bits(params)
         state = (self._init_comm_state(params) if self._stateful else None)
-        hist = {"loss": [], "bits_cumulative": []}
+        hist = {"loss": [], "bits_cumulative": [], "truncated": False}
         for _ in range(n_steps):
+            if deadline is not None and hist["loss"] \
+                    and _time.monotonic() >= deadline:
+                hist["truncated"] = True
+                break
             key, sub = jax.random.split(key)
             if self._stateful:
                 params, metrics, state = self.step(params, batch, sub, state)

@@ -284,11 +284,19 @@ class DistributedCubicNewton:
         eval_fn: Optional[Callable] = None,
         grad_tol: Optional[float] = None,
         full_data=None,
+        deadline: Optional[float] = None,
     ):
         """Run Algorithm 1 for ``n_steps`` (or until ‖∇f‖ ≤ grad_tol on the
         pooled data).  Returns (w, history dict); the history carries the
         exact integer uplink/downlink wire totals from the ledger plus the
-        per-step cumulative total (the bits-to-ε curve's x axis)."""
+        per-step cumulative total (the bits-to-ε curve's x axis).
+
+        ``deadline`` (a ``time.monotonic()`` timestamp) cooperatively
+        truncates the loop at the first round boundary past it — always
+        after at least one round — with ``hist["truncated"] = True``;
+        the sweep runner's per-cell wall-time budget."""
+        import time as _time
+
         key = key if key is not None else jax.random.PRNGKey(0)
         if full_data is None:
             full_data = (X.reshape(-1, X.shape[-1]), y.reshape(-1))
@@ -300,11 +308,16 @@ class DistributedCubicNewton:
         ledger = self.ledger
         ledger.reset()
         hist = {"loss": [], "grad_norm": [], "eval": [], "rounds": 0,
-                "bits_cumulative": [], "uplink_delta": []}
+                "bits_cumulative": [], "uplink_delta": [],
+                "truncated": False}
         w = w0
         v = jnp.zeros_like(w0)
         state = self.init_comm_state()
         for t in range(n_steps):
+            if deadline is not None and hist["loss"] \
+                    and _time.monotonic() >= deadline:
+                hist["truncated"] = True
+                break
             key, sub = jax.random.split(key)
             w, v, state, info = self.step(w, X, y, sub, v, state)
             # re-read every step: adaptive compressors move k between steps

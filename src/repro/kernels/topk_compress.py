@@ -153,6 +153,7 @@ def _topk_kernel(x_ref, vals_ref, idx_ref, *, k, d, n_iter):
         return jax.lax.dot_general(
             sel, lt, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
+            precision=jax.lax.Precision.HIGHEST,
         )
 
     n_sure = jnp.sum(sure)
@@ -169,6 +170,7 @@ def _topk_kernel(x_ref, vals_ref, idx_ref, *, k, d, n_iter):
         return jax.lax.dot_general(
             row, sel, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
+            precision=jax.lax.Precision.HIGHEST,
         )
 
     vals_ref[...] = gather(x).astype(vals_ref.dtype)
@@ -245,6 +247,7 @@ def _pack_kernel(x_ref, patt_ref, thresh_ref, budget_ref, vals_ref, idx_ref,
         return jax.lax.dot_general(
             sel, lt, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
+            precision=jax.lax.Precision.HIGHEST,
         )
 
     keep = sure + tie * (rank_of(tie) < budget).astype(jnp.float32)
@@ -257,10 +260,14 @@ def _pack_kernel(x_ref, patt_ref, thresh_ref, budget_ref, vals_ref, idx_ref,
         return jax.lax.dot_general(
             row, sel, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
+            precision=jax.lax.Precision.HIGHEST,
         )
 
     # local positions stay < B ≤ 2^24 (exact in f32); rebasing to global
-    # int32 AFTER the matmul keeps the kernel exact at any d
+    # int32 AFTER the matmul keeps the kernel exact at any d.  The
+    # Precision.HIGHEST on the dots keeps the MXU from truncating the f32
+    # operands to bf16 on real TPUs (positions > 256 and arbitrary values
+    # must survive the matmul bit-exactly)
     lpos = jax.lax.broadcasted_iota(jnp.float32, (1, B), 1)
     vals_ref[...] = gather(x)
     idx_ref[...] = jnp.round(gather(lpos)).astype(jnp.int32) + i * B

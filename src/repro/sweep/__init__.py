@@ -1,0 +1,58 @@
+"""`repro.sweep` — sharded, resumable spec-grid sweeps.
+
+The experiment engine over :class:`repro.api.ExperimentSpec`: a grid of
+axis dicts expands into validated specs (:mod:`~repro.sweep.grid`),
+hash-sharded across hosts and executed with failure isolation and
+per-cell wall-time budgets (:mod:`~repro.sweep.runner`), into an
+append-only JSONL store keyed by a canonical spec hash that makes
+re-runs free and multi-host merges deterministic
+(:mod:`~repro.sweep.store`), from which every paper artifact is a pivot
+(:mod:`~repro.sweep.report`).  ``python -m repro.sweep`` drives it all
+(``plan`` / ``run`` / ``merge`` / ``report``); the figure benchmarks are
+thin views over the same engine.
+"""
+from .grid import (
+    DEFAULT_STEPS,
+    PlanEntry,
+    SweepPlan,
+    expand_axes,
+    paper_strengths,
+    plan_grid,
+)
+from .grids import PRESETS, fig3_grid, fig12_grid, fig12_full_grid, smoke_grid
+from .report import (
+    bits_to_eps,
+    eps_table,
+    render_table,
+    report,
+    resilience_table,
+    rounds_to_eps,
+)
+from .runner import run_plan, shard_entries
+from .store import ResultStore, canonical_json, merge, spec_hash
+
+__all__ = [
+    "DEFAULT_STEPS",
+    "PRESETS",
+    "PlanEntry",
+    "ResultStore",
+    "SweepPlan",
+    "bits_to_eps",
+    "canonical_json",
+    "eps_table",
+    "expand_axes",
+    "fig3_grid",
+    "fig12_full_grid",
+    "fig12_grid",
+    "merge",
+    "paper_strengths",
+    "plan_grid",
+    "render_table",
+    "report",
+    "resilience_table",
+    "rounds_to_eps",
+    "run_plan",
+    "shard_entries",
+    "smoke_grid",
+    "spec_hash",
+]

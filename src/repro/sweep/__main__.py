@@ -1,0 +1,165 @@
+"""CLI: ``python -m repro.sweep {plan,run,merge,report}``.
+
+    # one host
+    python -m repro.sweep run --preset fig12 --store results/sweep/fig12.jsonl
+
+    # two hosts, disjoint shards, then a deterministic union
+    python -m repro.sweep run --preset fig12 --shard 0/2 --store s0.jsonl
+    python -m repro.sweep run --preset fig12 --shard 1/2 --store s1.jsonl
+    python -m repro.sweep merge s0.jsonl s1.jsonl --out fig12.jsonl
+    python -m repro.sweep report fig12.jsonl
+
+Re-invoking ``run`` over a finished store performs zero experiment
+builds (every cell hash hits the store).  ``--grid file.json`` takes a
+``{"axes": {...}, "base": {...}}`` dict instead of a preset.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import grids, runner
+from . import store as store_mod
+from .grid import plan_grid
+from .report import report as report_store
+
+
+def _build_plan(args):
+    if args.grid:
+        ignored = [flag for flag, v in (
+            ("--steps", args.steps), ("--datasets", args.datasets),
+            ("--alphas", args.alphas), ("--seed", args.seed),
+        ) if v is not None]
+        if ignored:
+            raise SystemExit(
+                f"{', '.join(ignored)} only override a --preset; with "
+                f"--grid, edit the grid file's axes/base instead"
+            )
+        with open(args.grid) as f:
+            g = json.load(f)
+        axes, base = g.get("axes", {}), g.get("base", {})
+    else:
+        kw = {}
+        if args.steps is not None:
+            kw["n_steps"] = args.steps
+        if getattr(args, "datasets", None):
+            kw["datasets"] = tuple(args.datasets.split(","))
+        if getattr(args, "alphas", None):
+            kw["alphas"] = tuple(float(a) for a in args.alphas.split(","))
+        if getattr(args, "seed", None) is not None:
+            kw["seed"] = args.seed
+        try:
+            axes, base = grids.PRESETS[args.preset](**kw)
+        except TypeError as e:
+            raise SystemExit(
+                f"preset {args.preset!r} does not take one of the "
+                f"supplied overrides: {e}"
+            ) from None
+    return plan_grid(axes, base)
+
+
+def _add_grid_args(p, with_run=False):
+    src = p.add_mutually_exclusive_group()
+    src.add_argument("--preset", choices=sorted(grids.PRESETS),
+                     default="smoke")
+    src.add_argument("--grid", help="JSON file with {'axes': …, 'base': …}")
+    p.add_argument("--steps", type=int, default=None,
+                   help="override the preset's per-cell round budget")
+    p.add_argument("--datasets", help="comma list, e.g. a9a,w8a")
+    p.add_argument("--alphas", help="comma list, e.g. 0.1,0.2")
+    p.add_argument("--seed", type=int, default=None)
+    if with_run:
+        p.add_argument("--shard", default="0/1", metavar="I/N",
+                       help="run shard I of N (hash-partitioned, disjoint)")
+        p.add_argument("--store", default=None,
+                       help="JSONL store path (default "
+                            "results/sweep/<preset>.jsonl)")
+        p.add_argument("--budget-s", type=float, default=None,
+                       help="per-cell wall-time budget (cooperative)")
+        p.add_argument("--limit", type=int, default=None,
+                       help="build at most this many cells this invocation")
+        p.add_argument("--retry-failed", action="store_true")
+        p.add_argument("--retry-truncated", action="store_true",
+                       help="re-run cells a previous --budget-s cut short")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sweep")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_plan = sub.add_parser("plan", help="expand + validate a grid")
+    _add_grid_args(p_plan)
+    p_plan.add_argument("--out", help="write the plan (hashes + specs) here")
+
+    p_run = sub.add_parser("run", help="run (a shard of) a grid into a store")
+    _add_grid_args(p_run, with_run=True)
+
+    p_merge = sub.add_parser("merge", help="union shard stores (canonical)")
+    p_merge.add_argument("stores", nargs="+")
+    p_merge.add_argument("--out", required=True)
+
+    p_rep = sub.add_parser("report", help="pivot a store into the tables")
+    p_rep.add_argument("store")
+    p_rep.add_argument("--eps", default="0.3,0.1,0.05",
+                       help="comma list of ε thresholds")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "plan":
+        plan = _build_plan(args)
+        print(plan.summary())
+        for e in plan.entries:
+            print(f"  {e.hash}  n_steps={e.n_steps}  "
+                  f"{store_mod.canonical_json(e.spec.to_dict())}")
+        for s in plan.skipped:
+            print(f"  SKIP {s['reason']}")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump([{"hash": e.hash, "n_steps": e.n_steps,
+                            "spec": e.spec.to_dict()}
+                           for e in plan.entries], f, indent=1)
+            print(f"plan written to {args.out}")
+        return 0
+
+    if args.cmd == "run":
+        plan = _build_plan(args)
+        try:
+            idx, num = (int(x) for x in args.shard.split("/"))
+        except ValueError:
+            raise SystemExit(f"--shard must look like 0/2, got {args.shard!r}")
+        if args.store:
+            path = args.store
+        else:
+            stem = (args.preset if not args.grid else
+                    os.path.splitext(os.path.basename(args.grid))[0])
+            path = f"results/sweep/{stem}.jsonl"
+        st = store_mod.ResultStore(path)
+        print(plan.summary() + f"; shard {idx}/{num} → {path}")
+        summary = runner.run_plan(
+            plan, st, shard_index=idx, num_shards=num,
+            time_budget_s=args.budget_s, limit=args.limit,
+            retry_failed=args.retry_failed,
+            retry_truncated=args.retry_truncated, log=print,
+        )
+        print(f"[sweep] done: built={summary['built']} "
+              f"cached={summary['cached']} failed={summary['failed']} "
+              f"(shard total {summary['total']})")
+        return 1 if summary["failed"] else 0
+
+    if args.cmd == "merge":
+        n = store_mod.merge(args.stores, args.out)
+        print(f"merged {len(args.stores)} stores → {args.out} ({n} cells)")
+        return 0
+
+    if args.cmd == "report":
+        eps = tuple(float(e) for e in args.eps.split(","))
+        report_store(store_mod.ResultStore(args.store), eps_grid=eps)
+        return 0
+
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

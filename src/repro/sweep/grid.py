@@ -1,0 +1,152 @@
+"""Sweep planner: axis dicts → validated :class:`~repro.api.ExperimentSpec`s.
+
+A **grid** is a base dict of :class:`ExperimentSpec` fields plus an
+``axes`` dict mapping field names to value lists:
+
+    axes = {"aggregator": ["mean", "norm_trim", "krum"],
+            "attack": ["gaussian", "flipped_label"],
+            "compressor": [None, "topk:0.1"]}
+
+:func:`plan_grid` expands the cartesian product (axes in insertion
+order, values in given order — fully deterministic), applies **resolve
+hooks** (e.g. :func:`paper_strengths`, which turns a bare registry head
+like ``"norm_trim"`` into the paper's per-α strength), then **prune
+hooks** and the facade's own :meth:`ExperimentSpec.validate` — so
+invalid cross-axis combos (EF-without-compressor, mesh label attacks,
+krum at an uncoverable α, …) are *skipped at plan time with a recorded
+reason*, never crashed at build time.  ``"n_steps"`` is the one non-spec
+key: it names the per-cell round budget and becomes part of the cell's
+canonical hash.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Iterable, Optional
+
+from ..api import ExperimentSpec, SpecError
+from .store import spec_hash
+
+DEFAULT_STEPS = 15   # the paper figures' round budget
+
+#: registry heads whose strength the paper derives from (α, m)
+_STRENGTH_RULES = ("norm_trim", "krum", "trimmed_mean")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """One sweep cell: a validated spec plus its round budget."""
+
+    spec: ExperimentSpec
+    n_steps: int
+
+    @property
+    def hash(self) -> str:
+        return spec_hash(self.spec, self.n_steps)
+
+
+@dataclasses.dataclass
+class SweepPlan:
+    """Expansion result: runnable cells + plan-time skips with reasons."""
+
+    entries: list
+    skipped: list     # [{"point": {...}, "reason": str}, ...]
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def hashes(self) -> list:
+        return [e.hash for e in self.entries]
+
+    def summary(self) -> str:
+        return (f"{len(self.entries)} cells planned, "
+                f"{len(self.skipped)} skipped at plan time")
+
+
+# ---------------------------------------------------------------- hooks
+def paper_strengths(point: dict) -> dict:
+    """Resolve bare aggregator heads to the paper's per-α strengths.
+
+    ``"norm_trim"`` → β = α + 2/m (the paper's rule), ``"krum"`` →
+    n_byz = ⌊α·m⌋, ``"trimmed_mean"`` → per-side fraction α + 1/m.
+    Specs that already carry a strength (``"norm_trim:0.3"``) pass
+    through untouched, as do strength-free rules.
+    """
+    agg = point.get("aggregator")
+    if agg in _STRENGTH_RULES:
+        alpha = float(point.get("alpha", 0.0))
+        m = int(point.get("m_workers", 20))
+        if agg == "norm_trim":
+            agg = f"norm_trim:{alpha + 2.0 / m}"
+        elif agg == "krum":
+            agg = f"krum:{int(alpha * m)}"
+        else:
+            agg = f"trimmed_mean:{alpha + 1.0 / m}"
+        point = dict(point, aggregator=agg)
+    return point
+
+
+# ------------------------------------------------------------- expansion
+def expand_axes(axes: dict, base: Optional[dict] = None):
+    """Deterministic cartesian product of ``axes`` over ``base``."""
+    base = dict(base or {})
+    if not axes:
+        yield base
+        return
+    names = list(axes)
+    for values in itertools.product(*(axes[n] for n in names)):
+        point = dict(base)
+        point.update(zip(names, values))
+        yield point
+
+
+def plan_grid(
+    axes: dict,
+    base: Optional[dict] = None,
+    *,
+    resolve: Iterable[Callable] = (paper_strengths,),
+    prune: Iterable[Callable] = (),
+) -> SweepPlan:
+    """Expand + validate a grid into a :class:`SweepPlan`.
+
+    ``resolve`` hooks map a point dict to a point dict (strength
+    resolution, derived fields); ``prune`` hooks return a skip-reason
+    string (or None to keep).  After the hooks, every point must pass
+    :meth:`ExperimentSpec.validate` — a :class:`SpecError` becomes a
+    recorded skip, and duplicate cells (two points resolving to the same
+    hash) keep the first occurrence.  A single callable is accepted for
+    either hook argument.
+    """
+    if callable(resolve):
+        resolve = (resolve,)
+    if callable(prune):
+        prune = (prune,)
+    entries: list[PlanEntry] = []
+    skipped: list[dict] = []
+    seen: set[str] = set()
+    for point in expand_axes(axes, base):
+        for hook in resolve:
+            point = hook(point)
+        n_steps = int(point.pop("n_steps", DEFAULT_STEPS))
+        reason = None
+        for hook in prune:
+            reason = hook(point)
+            if reason is not None:
+                break
+        if reason is not None:
+            skipped.append({"point": point, "reason": str(reason)})
+            continue
+        try:
+            entry = PlanEntry(
+                ExperimentSpec.from_dict(point).validate(), n_steps
+            )
+        except SpecError as e:
+            skipped.append({"point": point, "reason": str(e)})
+            continue
+        if entry.hash in seen:
+            skipped.append({"point": point,
+                            "reason": f"duplicate of cell {entry.hash}"})
+            continue
+        seen.add(entry.hash)
+        entries.append(entry)
+    return SweepPlan(entries, skipped)

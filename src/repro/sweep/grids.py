@@ -1,0 +1,79 @@
+"""The paper's grids as named presets (shared by CLI + benchmarks).
+
+Each preset returns ``(axes, base)`` for :func:`repro.sweep.plan_grid`;
+the figure benchmarks build the *same* axes here, so a store produced by
+``python -m repro.sweep run --preset fig12`` serves the fig12 benchmark
+byte-for-byte (identical cell hashes).
+"""
+from __future__ import annotations
+
+REGISTRY_AGGREGATORS = ("mean", "norm_trim", "krum", "trimmed_mean",
+                        "coordinate_median")
+REGISTRY_ATTACKS = ("gaussian", "negative", "saddle", "random_label",
+                    "flipped_label")
+FIG12_ATTACKS = ("flipped_label", "negative", "gaussian", "random_label")
+
+
+def _problems(datasets, kinds=("logistic", "robust")):
+    return [f"{ds}-{kind}" for ds in datasets for kind in kinds]
+
+
+def smoke_grid(n_steps: int = 2, seed: int = 0):
+    """The CI 2×2×2 grid: tiny synthetic problem, seconds-scale."""
+    axes = {
+        "aggregator": ["mean", "norm_trim"],
+        "attack": ["gaussian", "flipped_label"],
+        "compressor": [None, "topk:0.25"],
+    }
+    base = {"problem": "synthetic-logistic:400:16", "m_workers": 10,
+            "alpha": 0.2, "M": 10.0, "seed": seed, "n_steps": n_steps}
+    return axes, base
+
+
+def fig3_grid(n_steps: int = 15, datasets=("a9a", "w8a"),
+              Ms=(10.0, 15.0, 20.0), seed: int = 0):
+    """Fig. 3 — non-Byzantine convergence: problem × M, plain mean."""
+    axes = {"problem": _problems(datasets), "M": list(Ms)}
+    base = {"aggregator": "mean", "eta": 1.0, "seed": seed,
+            "n_steps": n_steps}
+    return axes, base
+
+
+def fig12_grid(n_steps: int = 15, datasets=("a9a", "w8a"),
+               attacks=FIG12_ATTACKS, alphas=(0.10, 0.15, 0.20),
+               aggregators=("norm_trim", "krum", "trimmed_mean"),
+               compressors=(None,), seed: int = 0):
+    """Figs. 1 & 2 — the Byzantine grid the benchmark sweeps.
+
+    The full acceptance grid (every registry aggregator × every attack ×
+    {identity, topk:0.1}) is this with ``aggregators=
+    REGISTRY_AGGREGATORS, attacks=REGISTRY_ATTACKS, compressors=(None,
+    "topk:0.1")`` — what the CLI preset ``fig12-full`` expands to.
+    Bare aggregator heads get the paper's per-α strengths from the
+    :func:`~repro.sweep.grid.paper_strengths` resolve hook.
+    """
+    axes = {
+        "problem": _problems(datasets),
+        "attack": list(attacks),
+        "alpha": list(alphas),
+        "aggregator": list(aggregators),
+        "compressor": list(compressors),
+    }
+    base = {"M": 10.0, "eta": 1.0, "seed": seed, "n_steps": n_steps}
+    return axes, base
+
+
+def fig12_full_grid(n_steps: int = 15, datasets=("a9a", "w8a"),
+                    alphas=(0.10, 0.15, 0.20), seed: int = 0):
+    """The acceptance grid: every registry aggregator × every registry
+    attack × {identity, topk:0.1}."""
+    return fig12_grid(n_steps, datasets, REGISTRY_ATTACKS, alphas,
+                      REGISTRY_AGGREGATORS, (None, "topk:0.1"), seed)
+
+
+PRESETS = {
+    "smoke": smoke_grid,
+    "fig3": fig3_grid,
+    "fig12": fig12_grid,
+    "fig12-full": fig12_full_grid,
+}

@@ -1,0 +1,154 @@
+"""Summarizer: pivot a result store into the paper's tables.
+
+Three pivots, each a pure function of the store's ``"ok"`` records:
+
+* :func:`resilience_table` — the attack × aggregator frontier (Figs. 1-2
+  / the byzantine_attacks example table): final loss (or final test
+  accuracy for logistic problems) per cell, one table per
+  (problem, α, compressor) group;
+* :func:`rounds_to_eps` — communication rounds until ‖∇f‖ ≤ ε (Table 1's
+  round counts);
+* :func:`bits_to_eps` — exact cumulative wire bits until ‖∇f‖ ≤ ε (the
+  communication-efficiency axis), straight off the ledger ints stored
+  with every record.
+
+``render_table`` turns rows into the aligned ASCII the CLI prints.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Iterable, Optional
+
+# ---------------------------------------------------------------- helpers
+def final_loss(rec: dict) -> Optional[float]:
+    loss = rec.get("metrics", {}).get("loss") or []
+    return loss[-1] if loss else None
+
+
+def final_accuracy(rec: dict) -> Optional[float]:
+    ev = rec.get("metrics", {}).get("eval") or []
+    return ev[-1] if ev else None
+
+
+def _first_hit(series, threshold, values=None):
+    """Index of the first ``series`` element ≤ threshold → values[i]
+    (or i+1 when values is None: a 1-based round count)."""
+    for i, s in enumerate(series):
+        if s <= threshold:
+            return values[i] if values is not None else i + 1
+    return None
+
+
+def rounds_to_eps(rec: dict, eps: float) -> Optional[int]:
+    """Rounds until ‖∇f‖ ≤ ε (None: never reached / no grad history)."""
+    m = rec.get("metrics", {})
+    gn = m.get("grad_norm") or []
+    rounds_per_step = max(m.get("rounds", len(gn)) // max(len(gn), 1), 1)
+    hit = _first_hit(gn, eps)
+    return hit * rounds_per_step if hit is not None else None
+
+
+def bits_to_eps(rec: dict, eps: float) -> Optional[int]:
+    """Exact total wire bits until ‖∇f‖ ≤ ε (ledger ints)."""
+    m = rec.get("metrics", {})
+    gn = m.get("grad_norm") or []
+    return _first_hit(gn, eps, values=m.get("bits_cumulative") or [])
+
+
+def _spec(rec: dict) -> dict:
+    return rec.get("spec", {})
+
+
+def _agg_head(rec: dict) -> str:
+    return str(_spec(rec).get("aggregator", "?")).partition(":")[0]
+
+
+def _comp_label(rec: dict) -> str:
+    return str(_spec(rec).get("compressor") or "identity")
+
+
+# ----------------------------------------------------------------- pivots
+def resilience_table(records: Iterable[dict]) -> list[dict]:
+    """Attack × aggregator frontier, grouped by (problem, α, compressor).
+
+    One row per (group, attack); aggregator heads become columns holding
+    final accuracy (logistic) or final loss (everything else).
+    """
+    groups: "OrderedDict[tuple, OrderedDict]" = OrderedDict()
+    for rec in records:
+        s = _spec(rec)
+        gkey = (s.get("problem"), s.get("alpha"), _comp_label(rec))
+        row_key = str(s.get("attack", "none")).partition(":")[0]
+        acc = final_accuracy(rec)
+        value = acc if acc is not None else final_loss(rec)
+        groups.setdefault(gkey, OrderedDict()) \
+              .setdefault(row_key, OrderedDict())[_agg_head(rec)] = value
+    rows = []
+    for (problem, alpha, comp), attacks in groups.items():
+        for attack, cells in attacks.items():
+            row = {"problem": problem, "alpha": alpha, "compressor": comp,
+                   "attack": attack}
+            row.update(cells)
+            rows.append(row)
+    return rows
+
+
+def eps_table(records: Iterable[dict], eps_grid=(0.3, 0.1, 0.05)) -> list[dict]:
+    """Rounds-to-ε and bits-to-ε per record (Table-1 style rows)."""
+    rows = []
+    for rec in records:
+        s = _spec(rec)
+        row = {"problem": s.get("problem"),
+               "aggregator": _agg_head(rec),
+               "attack": str(s.get("attack", "none")).partition(":")[0],
+               "alpha": s.get("alpha"),
+               "compressor": _comp_label(rec),
+               "total_bits": rec.get("metrics", {}).get("total_bits")}
+        for eps in eps_grid:
+            row[f"rounds@{eps:g}"] = rounds_to_eps(rec, eps)
+            row[f"bits@{eps:g}"] = bits_to_eps(rec, eps)
+        rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------- render
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)
+
+
+def render_table(rows: list[dict]) -> str:
+    """Aligned ASCII table over the union of row keys (insertion order)."""
+    if not rows:
+        return "(empty)"
+    cols: list[str] = []
+    for row in rows:
+        for k in row:
+            if k not in cols:
+                cols.append(k)
+    cells = [[_fmt(row.get(c)) for c in cols] for row in rows]
+    widths = [max(len(c), *(len(line[i]) for line in cells))
+              for i, c in enumerate(cols)]
+    out = [" | ".join(c.rjust(w) for c, w in zip(cols, widths))]
+    out.append("-+-".join("-" * w for w in widths))
+    out.extend(" | ".join(v.rjust(w) for v, w in zip(line, widths))
+               for line in cells)
+    return "\n".join(out)
+
+
+def report(store, eps_grid=(0.3, 0.1, 0.05), printer=print) -> dict:
+    """Print every pivot of a store; returns them as data for callers."""
+    recs = store.ok_records()
+    n_failed = sum(1 for r in store.records() if r.get("status") == "failed")
+    printer(f"# sweep report — {len(recs)} ok cells, {n_failed} failed, "
+            f"{len(store)} stored")
+    frontier = resilience_table(recs)
+    printer("\n## attack × aggregator resilience frontier")
+    printer(render_table(frontier))
+    eps_rows = eps_table(recs, eps_grid)
+    printer("\n## rounds-to-ε / bits-to-ε")
+    printer(render_table(eps_rows))
+    return {"resilience": frontier, "eps": eps_rows}

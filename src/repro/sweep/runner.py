@@ -1,0 +1,124 @@
+"""Deterministic sharder + executor for a :class:`~repro.sweep.SweepPlan`.
+
+Sharding is **by canonical cell hash**, not plan position:
+``shard_entries(entries, i, N)`` keeps the cells whose
+``int(hash, 16) % N == i``.  For any N the shards are provably disjoint
+(each hash has exactly one residue) and covering (every hash has one),
+and — because the hash is host-independent — two hosts planning the same
+grid independently agree on who owns which cell without coordination.
+
+Execution is failure-isolated and resumable: a cell whose hash is
+already in the store is skipped (zero builds on a re-run), a cell that
+raises is recorded as ``status="failed"`` with the error and the sweep
+moves on, and a per-cell wall-time budget cooperatively truncates a
+diverging run at the next round boundary (recorded in the metrics as
+``truncated``).
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .grid import PlanEntry, SweepPlan
+from .store import ResultStore
+
+
+# ---------------------------------------------------------------- shard
+def shard_entries(entries, shard_index: int, num_shards: int):
+    """The sub-list of cells shard ``shard_index`` of ``num_shards`` owns."""
+    if not 0 <= shard_index < num_shards:
+        raise ValueError(
+            f"shard_index must be in [0, {num_shards}), got {shard_index}"
+        )
+    return [e for e in entries
+            if int(e.hash, 16) % num_shards == shard_index]
+
+
+# -------------------------------------------------------------- execute
+def _build_and_run(entry: PlanEntry, deadline: Optional[float]) -> dict:
+    """Build one cell and run it; returns the JSON-ready metrics dict.
+
+    Split out so tests can inject failures, and so a future async/remote
+    executor can replace just this function.
+    """
+    exp = entry.spec.build()
+    w, hist = exp.run(entry.n_steps, deadline=deadline)
+    metrics = {k: v for k, v in hist.items()}
+    w_star = getattr(exp.problem, "w_star", None)
+    if w_star is not None and isinstance(w, jax.Array) and w.ndim == 1 \
+            and w.shape == w_star.shape:
+        metrics["w_err"] = float(
+            jnp.linalg.norm(w - w_star) / jnp.linalg.norm(w_star)
+        )
+    if exp.problem.saddle_value is not None:
+        metrics["saddle_value"] = exp.problem.saddle_value
+    return metrics
+
+
+def run_plan(
+    plan: SweepPlan,
+    store: ResultStore,
+    *,
+    shard_index: int = 0,
+    num_shards: int = 1,
+    time_budget_s: Optional[float] = None,
+    limit: Optional[int] = None,
+    retry_failed: bool = False,
+    retry_truncated: bool = False,
+    log: Optional[Callable[[str], None]] = None,
+) -> dict:
+    """Run this shard of the plan into ``store``; returns the summary
+    ``{"built": …, "cached": …, "failed": …, "shard": …, "total": …}``.
+
+    ``limit`` caps the number of cells *built* this invocation (the CI
+    smoke lever, and how tests simulate a killed run); ``retry_failed``
+    re-runs cells whose stored status is ``"failed"``, and
+    ``retry_truncated`` re-runs cells a previous wall-time budget cut
+    short, instead of treating either as done.
+    """
+    log = log or (lambda s: None)
+    entries = shard_entries(plan.entries, shard_index, num_shards)
+    built = cached = failed = 0
+    for entry in entries:
+        h = entry.hash
+        prior = store.get(h)
+        done = prior is not None
+        if done and retry_failed and prior.get("status") == "failed":
+            done = False
+        if done and retry_truncated \
+                and prior.get("metrics", {}).get("truncated"):
+            done = False
+        if done:
+            cached += 1
+            continue
+        if limit is not None and built >= limit:
+            break
+        deadline = (time.monotonic() + time_budget_s
+                    if time_budget_s is not None else None)
+        t0 = time.monotonic()
+        record = {"hash": h, "spec": entry.spec.to_dict(),
+                  "n_steps": entry.n_steps}
+        try:
+            record["status"] = "ok"
+            record["metrics"] = _build_and_run(entry, deadline)
+        except Exception as e:   # noqa: BLE001 — failure isolation is the point
+            record["status"] = "failed"
+            record["error"] = f"{type(e).__name__}: {e}"
+            log(f"[sweep] FAILED {h} {entry.spec.aggregator}/"
+                f"{entry.spec.attack}: {record['error']}")
+            log(traceback.format_exc(limit=3))
+            failed += 1
+        else:
+            built += 1
+        record["wall_time_s"] = round(time.monotonic() - t0, 3)
+        store.append(record)
+        log(f"[sweep] {record['status']} {h} "
+            f"problem={entry.spec.problem} agg={entry.spec.aggregator} "
+            f"attack={entry.spec.attack} comp={entry.spec.compressor} "
+            f"({record['wall_time_s']:.1f}s)")
+    return {"built": built, "cached": cached, "failed": failed,
+            "shard": (shard_index, num_shards), "total": len(entries)}

@@ -1,0 +1,294 @@
+"""repro.sweep: planner pruning, shard determinism, resumability,
+byte-identical merges, failure isolation, wall-time budgets, report
+pivots, and the serving downlink broadcast."""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.api import ExperimentSpec
+from repro.sweep import (
+    ResultStore,
+    merge,
+    plan_grid,
+    report,
+    run_plan,
+    shard_entries,
+    smoke_grid,
+    spec_hash,
+)
+from repro.sweep import runner as runner_mod
+
+# one tiny grid shared across the run-based tests (jit caches stay warm)
+AXES = {"aggregator": ["mean", "norm_trim"],
+        "compressor": [None, "topk:0.5"]}
+BASE = {"problem": "synthetic-logistic:200:8", "m_workers": 10,
+        "alpha": 0.2, "attack": "gaussian", "seed": 0, "n_steps": 2}
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return plan_grid(AXES, BASE)
+
+
+# ------------------------------------------------------------- planning
+def test_spec_hash_golden_value():
+    """The canonical cell hash is pinned: changing the canonicalization
+    (field set, key order, n_steps inclusion) is a store-format break."""
+    spec = ExperimentSpec(
+        problem="synthetic-logistic:400:16", m_workers=10, M=10.0,
+        alpha=0.2, attack="gaussian", aggregator="norm_trim:0.4",
+    )
+    assert spec_hash(spec, 2) == "5952ea3508ba31ae"
+
+
+def test_plan_is_deterministic(plan):
+    again = plan_grid(AXES, BASE)
+    assert [e.hash for e in again.entries] == [e.hash for e in plan.entries]
+    assert len(plan.entries) == 4 and not plan.skipped
+
+
+def test_plan_resolves_paper_strengths(plan):
+    aggs = {e.spec.aggregator for e in plan.entries}
+    assert aggs == {"mean", "norm_trim:0.4"}   # β = α + 2/m at plan time
+
+
+def test_invalid_combos_skipped_with_reason_not_crashed():
+    sweep = plan_grid(
+        axes={
+            "attack": ["gaussian", "flipped_label"],
+            "runtime": ["paper", "mesh"],
+            "error_feedback": [None, "ef21"],
+        },
+        base={"problem": "synthetic-logistic:200:8", "m_workers": 10,
+              "alpha": 0.2, "aggregator": "norm_trim:0.4", "n_steps": 2},
+        prune=(lambda p: "pruned by hook" if p.get("runtime") == "mesh"
+               and p.get("attack") == "gaussian" else None),
+    )
+    reasons = " ".join(s["reason"] for s in sweep.skipped)
+    # mesh + label attack: facade SpecError recorded, not raised
+    assert "label" in reasons
+    # paper runtime + mesh problem mismatch / ef21-without-compressor
+    assert "error_feedback" in reasons
+    # the custom prune hook fired too
+    assert "pruned by hook" in reasons
+    # and the valid paper-runtime combos survived
+    assert len(sweep.entries) >= 2
+    for e in sweep.entries:
+        assert e.spec.runtime == "paper"
+
+
+def test_duplicate_cells_collapse():
+    sweep = plan_grid(
+        axes={"aggregator": ["mean", "mean"]},
+        base=dict(BASE, compressor=None),
+    )
+    assert len(sweep.entries) == 1
+    assert any("duplicate" in s["reason"] for s in sweep.skipped)
+
+
+# ------------------------------------------------------------- sharding
+@pytest.mark.parametrize("num_shards", [1, 2, 3, 5, 8, 11])
+def test_shards_disjoint_and_covering(num_shards):
+    axes, base = smoke_grid()
+    entries = plan_grid(axes, base).entries
+    seen = []
+    for i in range(num_shards):
+        seen.extend(e.hash for e in shard_entries(entries, i, num_shards))
+    assert len(seen) == len(entries)                      # covering, no dup
+    assert sorted(seen) == sorted(e.hash for e in entries)
+
+
+def test_shard_index_validated():
+    with pytest.raises(ValueError):
+        shard_entries([], 2, 2)
+
+
+# -------------------------------------------------- resume + merge bytes
+def test_kill_and_resume_merge_byte_identical(plan, tmp_path):
+    # reference: the full sweep in one uninterrupted run
+    full = ResultStore(str(tmp_path / "full.jsonl"))
+    s = run_plan(plan, full)
+    assert s == {"built": 4, "cached": 0, "failed": 0,
+                 "shard": (0, 1), "total": 4}
+    merge([full.path], str(tmp_path / "full_merged.jsonl"))
+    golden = (tmp_path / "full_merged.jsonl").read_bytes()
+
+    # killed mid-sweep (limit= simulates the kill) and re-run
+    part = ResultStore(str(tmp_path / "part.jsonl"))
+    assert run_plan(plan, part, limit=2)["built"] == 2
+    resumed = ResultStore(part.path)          # fresh open, as a new process
+    s = run_plan(plan, resumed)
+    assert s["built"] == 2 and s["cached"] == 2
+    merge([part.path], str(tmp_path / "part_merged.jsonl"))
+    assert (tmp_path / "part_merged.jsonl").read_bytes() == golden
+
+    # a finished sweep re-runs with ZERO builds
+    assert run_plan(plan, resumed)["built"] == 0
+
+
+def test_two_shard_merge_equals_single_host(plan, tmp_path):
+    s0 = ResultStore(str(tmp_path / "s0.jsonl"))
+    s1 = ResultStore(str(tmp_path / "s1.jsonl"))
+    run_plan(plan, s0, shard_index=0, num_shards=2)
+    run_plan(plan, s1, shard_index=1, num_shards=2)
+    assert not (s0.hashes() & s1.hashes())
+    merge([s0.path, s1.path], str(tmp_path / "m2.jsonl"))
+
+    one = ResultStore(str(tmp_path / "one.jsonl"))
+    run_plan(plan, one)
+    merge([one.path], str(tmp_path / "m1.jsonl"))
+    assert (tmp_path / "m2.jsonl").read_bytes() == \
+        (tmp_path / "m1.jsonl").read_bytes()
+
+
+def test_store_records_carry_exact_wire_ints(plan, tmp_path):
+    store = ResultStore(str(tmp_path / "w.jsonl"))
+    run_plan(plan, store)
+    for rec in store.ok_records():
+        m = rec["metrics"]
+        assert isinstance(m["uplink_bits"], int)
+        assert isinstance(m["downlink_bits"], int)
+        assert m["total_bits"] == m["uplink_bits"] + m["downlink_bits"]
+        assert m["bits_cumulative"][-1] == m["total_bits"]
+
+
+# ------------------------------------------------- isolation + budgets
+def test_failure_isolation_and_retry(plan, tmp_path, monkeypatch):
+    doomed = plan.entries[1].hash
+    real = runner_mod._build_and_run
+
+    def flaky(entry, deadline):
+        if entry.hash == doomed:
+            raise RuntimeError("diverged (injected)")
+        return real(entry, deadline)
+
+    monkeypatch.setattr(runner_mod, "_build_and_run", flaky)
+    store = ResultStore(str(tmp_path / "f.jsonl"))
+    s = run_plan(plan, store)
+    assert s["built"] == 3 and s["failed"] == 1      # sweep survived
+    rec = store.get(doomed)
+    assert rec["status"] == "failed" and "diverged" in rec["error"]
+
+    # failed cells count as done unless retry_failed is set
+    assert run_plan(plan, store)["built"] == 0
+    monkeypatch.setattr(runner_mod, "_build_and_run", real)
+    s = run_plan(plan, store, retry_failed=True)
+    assert s["built"] == 1 and store.get(doomed)["status"] == "ok"
+
+
+def test_wall_time_budget_truncates_not_kills(tmp_path):
+    sweep = plan_grid({}, dict(BASE, aggregator="mean", n_steps=50))
+    store = ResultStore(str(tmp_path / "b.jsonl"))
+    s = run_plan(sweep, store, time_budget_s=1e-6)
+    assert s == {"built": 1, "cached": 0, "failed": 0,
+                 "shard": (0, 1), "total": 1}
+    (rec,) = store.ok_records()
+    m = rec["metrics"]
+    assert m["truncated"] is True
+    assert 1 <= len(m["loss"]) < 50       # at least one round, then stopped
+
+    # truncated counts as done by default, but retry_truncated re-runs it
+    assert run_plan(sweep, store)["built"] == 0
+    s = run_plan(sweep, store, retry_truncated=True)
+    assert s["built"] == 1
+    (rec,) = store.ok_records()
+    assert rec["metrics"]["truncated"] is False
+    assert len(rec["metrics"]["loss"]) == 50
+
+
+def test_merge_refuses_missing_shard_file(plan, tmp_path):
+    store = ResultStore(str(tmp_path / "ok.jsonl"))
+    run_plan(plan, store, limit=1)
+    with pytest.raises(FileNotFoundError, match="typo"):
+        merge([store.path, str(tmp_path / "typo.jsonl")],
+              str(tmp_path / "out.jsonl"))
+
+
+# -------------------------------------------------------------- report
+def test_report_tables_render(plan, tmp_path, capsys):
+    store = ResultStore(str(tmp_path / "r.jsonl"))
+    run_plan(plan, store)
+    tables = report(store)
+    out = capsys.readouterr().out
+    assert "resilience frontier" in out and "norm_trim" in out
+    assert len(tables["resilience"]) >= 1
+    assert len(tables["eps"]) == 4
+    row = tables["resilience"][0]
+    assert {"problem", "alpha", "compressor", "attack"} <= set(row)
+
+
+def test_cli_plan_and_report_roundtrip(plan, tmp_path, capsys):
+    from repro.sweep.__main__ import main
+
+    store_path = str(tmp_path / "cli.jsonl")
+    run_plan(plan, ResultStore(store_path))
+    assert main(["plan", "--preset", "smoke"]) == 0
+    assert main(["report", store_path]) == 0
+    out = capsys.readouterr().out
+    assert "cells planned" in out and "sweep report" in out
+
+
+# ------------------------------------------------- benchmark thin views
+def test_fig12_thin_view_pivots_only_its_plan(tmp_path):
+    """A reused store may hold other grids (other T, other compressors);
+    the figure must render exactly its own plan's cells."""
+    from benchmarks import fig12_byzantine
+
+    path = str(tmp_path / "fig12.jsonl")
+    kw = dict(datasets=("a9a",), attacks=("gaussian",), alphas=(0.2,),
+              aggregators=("norm_trim",), store_path=path)
+    keys = {"fig2/a9a/gaussian/alpha=0.2/norm_trim",
+            "fig1/a9a/gaussian/alpha=0.2/norm_trim"}
+    r1 = fig12_byzantine.run(T=2, **kw)
+    assert set(r1) == keys
+    # second grid against the SAME store: T=3 cells join the T=2 ones,
+    # but each view pivots only its own round budget
+    r2 = fig12_byzantine.run(T=3, **kw)
+    assert set(r2) == keys
+    assert len(r2["fig1/a9a/gaussian/alpha=0.2/norm_trim"]["loss"]) == 3
+    assert len(r1["fig1/a9a/gaussian/alpha=0.2/norm_trim"]["loss"]) == 2
+
+
+def test_fig12_raises_on_failed_cells(monkeypatch):
+    from benchmarks import fig12_byzantine
+
+    calls = {"n": 0}
+
+    def boom(entry, deadline):
+        calls["n"] += 1
+        raise RuntimeError("injected divergence")
+
+    monkeypatch.setattr(runner_mod, "_build_and_run", boom)
+    with pytest.raises(RuntimeError, match="failed"):
+        fig12_byzantine.run(T=2, datasets=("a9a",), attacks=("gaussian",),
+                            alphas=(0.2,), aggregators=("norm_trim",))
+    assert calls["n"] > 0
+
+
+def test_fig12_raises_on_uncoverable_grid():
+    """Plan-time skips in the figure's own grid are loud (the old
+    SpecError behaviour), not silently missing keys."""
+    from benchmarks import fig12_byzantine
+
+    with pytest.raises(RuntimeError, match="skipped at plan time"):
+        fig12_byzantine.run(T=2, datasets=("a9a",), attacks=("gaussian",),
+                            alphas=(0.45,), aggregators=("krum",))
+
+
+# ------------------------------------------------- serving downlink bits
+def test_serve_broadcast_params_int8_bits_and_accuracy():
+    from repro.launch.serve import broadcast_params
+
+    params = {"w": jnp.linspace(-1.0, 1.0, 100), "b": jnp.zeros((3,))}
+    out, info = broadcast_params(params, "int8")
+    # exact ledger bits: 8/coord + one fp32 scale per 128-block per leaf
+    assert info["downlink_bits"] == (100 * 8 + 32) + (3 * 8 + 32)
+    assert info["full_precision_bits"] == 32 * 103
+    # int8 per-coordinate error ≤ max|x|/254
+    assert float(jnp.max(jnp.abs(out["w"] - params["w"]))) <= 1.0 / 254 + 1e-6
+    assert out["b"].shape == (3,)
+
+    out, info = broadcast_params(params, None)
+    assert info["downlink_bits"] == info["full_precision_bits"]
+    assert jnp.array_equal(out["w"], params["w"])
