@@ -32,7 +32,18 @@ def main(argv=None) -> None:
                     help="persist the fig3/fig12 sweeps as resumable "
                          "stores under this dir (re-runs skip stored "
                          "cells); default: in-memory")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable repro.telemetry: one span per benchmark "
+                         "section (plus per-round/wire/compile events from "
+                         "the runs underneath) into DIR/events.jsonl and a "
+                         "Perfetto-loadable DIR/trace.json")
     args = ap.parse_args(argv)
+
+    from repro.telemetry import get_telemetry
+
+    tel = get_telemetry()
+    if args.trace_dir is not None:
+        tel.enable(args.trace_dir)
 
     def _store(name):
         if args.sweep_store_dir is None:
@@ -56,9 +67,11 @@ def main(argv=None) -> None:
 
     # ---- Fig. 3: non-Byzantine convergence (sweep-engine backed) ---------
     t0 = time.time()
-    r3 = fig3_convergence.run(T=T, datasets=datasets,
-                              Ms=(10.0, 15.0, 20.0) if args.full else (10.0,),
-                              store_path=_store("fig3"))
+    with tel.span("bench.fig3"):
+        r3 = fig3_convergence.run(T=T, datasets=datasets,
+                                  Ms=(10.0, 15.0, 20.0) if args.full
+                                  else (10.0,),
+                                  store_path=_store("fig3"))
     n_rounds = sum(len(v.get("loss", [])) for v in r3.values())
     for k, v in r3.items():
         derived = (f"final_acc={v['accuracy'][-1]:.4f}" if "accuracy" in v
@@ -68,14 +81,15 @@ def main(argv=None) -> None:
 
     # ---- Figs. 1 & 2: Byzantine attacks (sweep-engine backed) ------------
     t0 = time.time()
-    r12 = fig12_byzantine.run(
-        T=T, datasets=datasets,
-        attacks=("flipped_label", "negative", "gaussian", "random_label")
-        if args.full else (("gaussian",) if args.dryrun
-                           else ("flipped_label", "gaussian")),
-        alphas=(0.10, 0.15, 0.20) if args.full else (0.20,),
-        store_path=_store("fig12"),
-    )
+    with tel.span("bench.fig12"):
+        r12 = fig12_byzantine.run(
+            T=T, datasets=datasets,
+            attacks=("flipped_label", "negative", "gaussian", "random_label")
+            if args.full else (("gaussian",) if args.dryrun
+                               else ("flipped_label", "gaussian")),
+            alphas=(0.10, 0.15, 0.20) if args.full else (0.20,),
+            store_path=_store("fig12"),
+        )
     n_rounds = sum(len(v.get("loss", v.get("accuracy", []))) for v in r12.values())
     for k, v in r12.items():
         derived = (f"final_acc={v['accuracy'][-1]:.4f}" if "accuracy" in v
@@ -85,14 +99,15 @@ def main(argv=None) -> None:
 
     # ---- Table 1: communication rounds vs ByzantinePGD --------------------
     t0 = time.time()
-    t1 = table1_communication.run(
-        dataset="a9a" if args.dryrun else "w8a",
-        attacks=("gaussian", "flipped_label", "negative", "random_label")
-        if args.full else ("gaussian",),
-        alphas=(0.10, 0.15, 0.20) if args.full else (0.15,),
-        max_rounds=400 if args.full else (40 if args.dryrun else 250),
-        newton_budget=60 if not args.dryrun else 4,
-    )
+    with tel.span("bench.table1"):
+        t1 = table1_communication.run(
+            dataset="a9a" if args.dryrun else "w8a",
+            attacks=("gaussian", "flipped_label", "negative", "random_label")
+            if args.full else ("gaussian",),
+            alphas=(0.10, 0.15, 0.20) if args.full else (0.15,),
+            max_rounds=400 if args.full else (40 if args.dryrun else 250),
+            newton_budget=60 if not args.dryrun else 4,
+        )
     dt = time.time() - t0
     for row in t1:
         _emit(
@@ -107,10 +122,11 @@ def main(argv=None) -> None:
 
     # ---- Table 1 (compression axis): exact bits on the wire ---------------
     t0 = time.time()
-    tc = table1_communication.run_compression(
-        dataset="w8a" if args.full else "a9a",
-        newton_budget=60 if not args.dryrun else 4,
-    )
+    with tel.span("bench.table1_compression"):
+        tc = table1_communication.run_compression(
+            dataset="w8a" if args.full else "a9a",
+            newton_budget=60 if not args.dryrun else 4,
+        )
     dt = time.time() - t0
     for row in tc:
         _emit(
@@ -127,11 +143,12 @@ def main(argv=None) -> None:
 
     # ---- bits-to-ε curve (total wire, uplink+downlink) --------------------
     t0 = time.time()
-    te = table1_communication.run_bits_to_eps(
-        dataset="w8a" if args.full else "a9a",
-        newton_budget=25 if not args.dryrun else 4,
-        eps_grid=(0.3, 0.1, 0.05, 0.02) if not args.dryrun else (0.3,),
-    )
+    with tel.span("bench.bits_to_eps"):
+        te = table1_communication.run_bits_to_eps(
+            dataset="w8a" if args.full else "a9a",
+            newton_budget=25 if not args.dryrun else 4,
+            eps_grid=(0.3, 0.1, 0.05, 0.02) if not args.dryrun else (0.3,),
+        )
     dt = time.time() - t0
     for row in te:
         eps_str = " ".join(
@@ -152,7 +169,8 @@ def main(argv=None) -> None:
     kd = ((1408, 4096) if args.dryrun
           else table1_communication.KERNEL_TIMING_DS if args.full
           else (1408, 16_384, 131_072))
-    kt = table1_communication.run_kernel_timing(ds=kd)
+    with tel.span("bench.topk_kernel"):
+        kt = table1_communication.run_kernel_timing(ds=kd)
     for row in kt:
         _emit(
             f"topk_kernel/d={row['d']}",
@@ -165,7 +183,9 @@ def main(argv=None) -> None:
 
     # ---- Saddle escape (beyond-paper; Theorems 1-2 exercised directly) ----
     t0 = time.time()
-    se = saddle_escape.run(T=25 if args.full else (5 if args.dryrun else 15))
+    with tel.span("bench.saddle_escape"):
+        se = saddle_escape.run(
+            T=25 if args.full else (5 if args.dryrun else 15))
     dt = (time.time() - t0) * 1e6 / 45
     sv = se["newton"]["saddle_value"]
     _emit("saddle/newton", dt, f"final={se['newton']['loss'][-1]:.4f} "
@@ -177,7 +197,8 @@ def main(argv=None) -> None:
 
     # ---- Roofline: dry-run aggregation + kernel micro-bench ---------------
     if not args.skip_roofline:
-        rows = roofline.roofline_table()
+        with tel.span("bench.roofline"):
+            rows = roofline.roofline_table()
         for r in rows:
             if r["status"] == "ok":
                 _emit(
@@ -198,6 +219,9 @@ def main(argv=None) -> None:
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(all_results, f, indent=1, default=str)
+    if args.trace_dir is not None:
+        tel.flush()
+        print(f"# telemetry -> {args.trace_dir}")
 
 
 if __name__ == "__main__":

@@ -176,36 +176,48 @@ def run_kernel_timing(ds=KERNEL_TIMING_DS, ratio=0.1, repeats=3, seed=0):
 
     from repro.kernels import kernel_plan, topk_compress
     from repro.kernels.ref import topk_compress_ref
+    from repro.telemetry import get_telemetry
 
+    tel = get_telemetry()
     rows = []
     for d in ds:
         k = max(1, int(round(ratio * d)))
-        x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
-        plan, tile = kernel_plan(d)
-        kern = jax.jit(lambda z, kk=k: topk_compress(z, kk))
-        xla = jax.jit(lambda z, kk=k: topk_compress_ref(z, kk))
-        v1, i1 = kern(x)
-        v2, i2 = xla(x)
-        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
-        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        # each rung of the d ladder is one span (parity check + both
+        # timed paths), so a --trace-dir run shows where the ladder's
+        # wall time actually goes instead of ad-hoc prints
+        with tel.span("bench.topk_kernel.d", d=d, k=k):
+            x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+            plan, tile = kernel_plan(d)
+            kern = jax.jit(lambda z, kk=k: topk_compress(z, kk))
+            xla = jax.jit(lambda z, kk=k: topk_compress_ref(z, kk))
+            v1, i1 = kern(x)
+            v2, i2 = xla(x)
+            np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+            np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
 
-        def _time(f, z=x):
-            f(z)[0].block_until_ready()          # compiled above; re-warm
-            t0 = time.perf_counter()
-            for _ in range(repeats):
-                f(z)[0].block_until_ready()
-            return (time.perf_counter() - t0) / repeats * 1e6
+            def _time(f, z=x):
+                f(z)[0].block_until_ready()      # compiled above; re-warm
+                t0 = time.perf_counter()
+                for _ in range(repeats):
+                    f(z)[0].block_until_ready()
+                return (time.perf_counter() - t0) / repeats * 1e6
 
-        rows.append({
-            "d": d,
-            "k": k,
-            "plan": plan,
-            "tile": tile,
-            "kernel_us": _time(kern),
-            "xla_topk_us": _time(xla),
-            "backend": jax.default_backend(),
-            "interpret_mode": jax.default_backend() != "tpu",
-        })
+            row = {
+                "d": d,
+                "k": k,
+                "plan": plan,
+                "tile": tile,
+                "kernel_us": _time(kern),
+                "xla_topk_us": _time(xla),
+                "backend": jax.default_backend(),
+                "interpret_mode": jax.default_backend() != "tpu",
+            }
+        if tel.enabled:
+            tel.event("bench.topk_kernel.row", d=d, k=k, plan=plan,
+                      kernel_us=row["kernel_us"],
+                      xla_topk_us=row["xla_topk_us"],
+                      interpret_mode=row["interpret_mode"])
+        rows.append(row)
     return rows
 
 

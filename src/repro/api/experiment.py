@@ -344,6 +344,7 @@ class Experiment:
                 eval_fn=eval_fn if eval_fn is not None
                 else self.problem.eval_fn,
                 grad_tol=grad_tol, deadline=deadline,
+                saddle_value=self.problem.saddle_value,
             )
         return self._run_mesh(n_steps, key=key, deadline=deadline)
 
@@ -354,6 +355,8 @@ class Experiment:
         import jax
 
         from ..comm import WireLedger
+        from ..telemetry import (RoundRecord, compile_scope, get_telemetry,
+                                 rejected_from_keep)
 
         params = self.problem.w0
         batch = self.problem.batch
@@ -361,21 +364,45 @@ class Experiment:
         ledger = WireLedger()
         wire = self._raw_step.wire_bits(params)
         state = (self._init_comm_state(params) if self._stateful else None)
-        hist = {"loss": [], "bits_cumulative": [], "truncated": False}
-        for _ in range(n_steps):
+        hist = {"loss": [], "bits_cumulative": [], "uplink_delta": [],
+                "truncated": False}
+        tel = get_telemetry()
+        prev_loss = None
+        for t in range(n_steps):
             if deadline is not None and hist["loss"] \
                     and _time.monotonic() >= deadline:
                 hist["truncated"] = True
+                if tel.enabled:
+                    tel.event("mesh.truncated", step=t)
                 break
             key, sub = jax.random.split(key)
-            if self._stateful:
-                params, metrics, state = self.step(params, batch, sub, state)
-            else:
-                params, metrics = self.step(params, batch, sub)
+            # (re)compiles of the mesh step are attributed to this scope
+            # by the telemetry compile-counter (host-side contextvar)
+            with compile_scope("mesh.step"):
+                if self._stateful:
+                    params, metrics, state = self.step(params, batch, sub,
+                                                       state)
+                else:
+                    params, metrics = self.step(params, batch, sub)
             ledger.record(uplink=wire["uplink"], downlink=wire["downlink"],
-                          rounds=2 if self.config.two_round else 1)
-            hist["loss"].append(float(metrics["loss"]))
+                          rounds=2 if self.config.two_round else 1,
+                          label="round")
+            loss = float(metrics["loss"])
+            hist["loss"].append(loss)
+            hist["uplink_delta"].append(float(metrics["uplink_delta"]))
             hist["bits_cumulative"].append(ledger.total_bits)
+            if tel.enabled:
+                tel.round(RoundRecord(
+                    step=t, runtime="mesh", loss=loss,
+                    model_decrease=(None if prev_loss is None
+                                    else prev_loss - loss),
+                    uplink_delta=float(metrics["uplink_delta"]),
+                    rejected=rejected_from_keep(metrics["kept"]),
+                    attack=self.spec.attack, alpha=self.spec.alpha,
+                    wire_uplink_bits=wire["uplink"],
+                    wire_downlink_bits=wire["downlink"],
+                ), name="mesh.round")
+                prev_loss = loss
         hist["rounds"] = ledger.rounds
         hist.update(ledger.snapshot())
         self._last_metrics = metrics

@@ -166,7 +166,7 @@ class VectorChannel(Channel):
         return payload * (self.n_senders if self.is_uplink else 1)
 
     def record(self, ledger, rounds: int = 1) -> None:
-        ledger.record(rounds=rounds,
+        ledger.record(rounds=rounds, label=self.direction,
                       **self._ledger_kwargs(self.bits_per_round() * rounds))
 
 
@@ -281,5 +281,5 @@ class TreeChannel(Channel):
         return payload * (self.n_senders if self.is_uplink else 1)
 
     def record(self, ledger, params, rounds: int = 1) -> None:
-        ledger.record(rounds=rounds,
+        ledger.record(rounds=rounds, label=self.direction,
                       **self._ledger_kwargs(self.bits_per_round(params) * rounds))

@@ -17,16 +17,30 @@ Conventions
 * payload bits are implementation-independent: a compressor that
   assembles its payload in blocks (the sharded top-k kernel) records the
   same exact int as the single-tile/XLA path for the same (d, k).
+
+Telemetry: every ``record`` call doubles as a per-transmit ``wire``
+event and ``snapshot`` as a ``ledger`` event on the global
+:mod:`repro.telemetry` stream when it is enabled (exact same ints, so
+the stream's wire events sum to the ledger totals by construction —
+``python -m repro.telemetry validate --check-wire`` asserts it).  Each
+ledger carries a process-unique ``ledger_id`` pairing its events.
 """
 from __future__ import annotations
+
+import itertools
+
+from ..telemetry import get_telemetry
+
+_LEDGER_IDS = itertools.count()
 
 
 class WireLedger:
     """Exact integer uplink/downlink bit totals, accumulated host-side."""
 
-    __slots__ = ("uplink_bits", "downlink_bits", "rounds")
+    __slots__ = ("uplink_bits", "downlink_bits", "rounds", "ledger_id")
 
     def __init__(self) -> None:
+        self.ledger_id: int = next(_LEDGER_IDS)
         self.reset()
 
     def reset(self) -> None:
@@ -35,24 +49,37 @@ class WireLedger:
         self.rounds: int = 0
 
     def record(self, *, uplink: int = 0, downlink: int = 0,
-               rounds: int = 1) -> None:
-        """Add one (or ``rounds``) communication rounds' exact bit cost."""
+               rounds: int = 1, label: str = None) -> None:
+        """Add one (or ``rounds``) communication rounds' exact bit cost.
+        ``label`` only annotates the telemetry wire event (e.g. which
+        channel paid), never the accounting."""
         self.uplink_bits += int(uplink)
         self.downlink_bits += int(downlink)
         self.rounds += int(rounds)
+        tel = get_telemetry()
+        if tel.enabled:
+            tel.wire(ledger_id=self.ledger_id, uplink=int(uplink),
+                     downlink=int(downlink), rounds=int(rounds),
+                     label=label)
 
     @property
     def total_bits(self) -> int:
         return self.uplink_bits + self.downlink_bits
 
     def snapshot(self) -> dict:
-        """Plain-dict view (exact ints) for histories / JSON."""
-        return {
+        """Plain-dict view (exact ints) for histories / JSON; also the
+        end-of-run ``ledger`` telemetry event the wire events must sum
+        to (run drivers call this exactly once per finished run)."""
+        snap = {
             "uplink_bits": self.uplink_bits,
             "downlink_bits": self.downlink_bits,
             "total_bits": self.total_bits,
             "rounds": self.rounds,
         }
+        tel = get_telemetry()
+        if tel.enabled:
+            tel.ledger_snapshot(ledger_id=self.ledger_id, snapshot=snap)
+        return snap
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return (f"WireLedger(uplink={self.uplink_bits}, "

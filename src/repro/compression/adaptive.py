@@ -63,8 +63,12 @@ class AdaptiveTopK(TopK):
     def schedule_update(self, *, grad_norm: float | None = None,
                         measured_delta: float | None = None) -> bool:
         """Feed the measured signals; returns True when k changed (the
-        caller must then re-trace anything that baked the old k in)."""
+        caller must then re-trace anything that baked the old k in).
+        Every k move is a telemetry ``adaptive_k`` event carrying the
+        old/new k and the reason — the shape key of the re-trace the
+        caller is about to pay."""
         old_k = self.k
+        reason = None
         if grad_norm is not None:
             self._grad_norms.append(float(grad_norm))
         # δ-targeted control: the channel's measured contraction fell below
@@ -75,19 +79,36 @@ class AdaptiveTopK(TopK):
                 and self.k < self.k_max):
             self.k = min(self.k_max, 2 * self.k)
             self._grad_norms.clear()
+            self._emit_move(old_k, "delta_below_target", measured_delta)
             return True
         if len(self._grad_norms) == self._grad_norms.maxlen:
             first, last = self._grad_norms[0], self._grad_norms[-1]
             rel = (first - last) / max(first, 1e-30)
             if rel < self.plateau_tol and self.k < self.k_max:
                 self.k = min(self.k_max, 2 * self.k)
+                reason = "plateau"
             elif (rel > self.shrink_tol and self.k > self.k_min
                   and (measured_delta is None
                        or measured_delta >= self.delta_target)):
                 self.k = max(self.k_min, self.k // 2)
+                reason = "fast_progress"
             if self.k != old_k:
                 self._grad_norms.clear()
+                self._emit_move(old_k, reason, measured_delta)
         return self.k != old_k
+
+    def _emit_move(self, old_k: int, reason: str,
+                   measured_delta: float | None) -> None:
+        """One ``adaptive_k`` telemetry event per schedule move (no-op
+        when telemetry is disabled — one attribute check)."""
+        from ..telemetry import get_telemetry
+
+        tel = get_telemetry()
+        if tel.enabled:
+            tel.event("adaptive_k", k_from=int(old_k), k_to=int(self.k),
+                      reason=reason,
+                      **({} if measured_delta is None
+                         else {"measured_delta": float(measured_delta)}))
 
     # -- δ accounting: the guarantee must hold for the whole run --------
     def delta_bound(self, d):

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from .tree_util import tree_axpy, tree_size, tree_sqnorm
 from ..comm import TreeChannel
+from ..telemetry import device_event
 
 
 @dataclasses.dataclass(frozen=True)
@@ -291,6 +292,12 @@ def _make_step(
         norms = _per_worker_norms(s, m)
         update, keep = aggregator.tree(s)
         update = cu(update)
+        # The keep mask and per-worker norms live on the device; when
+        # telemetry is enabled at TRACE time this stages one host
+        # callback shipping them out.  Disabled, device_event stages
+        # nothing — the lowered HLO is bit-identical (pinned by the
+        # HLO-identity test).
+        device_event("mesh.aggregate", keep=keep, update_norms=norms)
 
         # ---- downlink channel: compressed broadcast of the step ----
         down_state = comm_state["downlink"] if stateful else None

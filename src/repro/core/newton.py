@@ -33,6 +33,13 @@ import jax.numpy as jnp
 from .cubic import solve_cubic_gd
 from ..comm import VectorChannel, WireLedger
 from ..compression import AdaptiveTopK
+from ..telemetry import (
+    RoundRecord,
+    compile_scope,
+    get_telemetry,
+    record_retrace,
+    rejected_from_keep,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,7 +126,16 @@ class DistributedCubicNewton:
     # -- channel construction (once per (d, m), never per trace) -------
     def _rebuild_jit(self):
         """(Re)create the jitted step — required whenever a channel's
-        static shape (an adaptive compressor's k) changes."""
+        static shape (an adaptive compressor's k) changes.  Each rebuild
+        is an explicit telemetry re-trace event carrying the shape key
+        (the live per-channel ks) that triggered it."""
+        if self._dims is not None:   # a re-build, not the initial build
+            record_retrace(
+                "newton.step.rebuild",
+                **{f"k_{name}": ch.compressor.k
+                   for name, ch in self.channels.items()
+                   if isinstance(ch.compressor, AdaptiveTopK)},
+            )
         self._step = jax.jit(self._step_impl)
 
     def _ensure_channels(self, d: int, m: int):
@@ -242,7 +258,11 @@ class DistributedCubicNewton:
         self._ensure_channels(w.shape[0], X.shape[0])
         v = jnp.zeros_like(w) if v is None else v
         state = self.init_comm_state() if state is None else state
-        return self._step(w, v, state, X, y, key)
+        # every (re)compile of the step is attributed to this scope by
+        # the telemetry compile-counter (host-side contextvar, never
+        # traced) — the compile-count regression pins read it
+        with compile_scope("newton.step"):
+            return self._step(w, v, state, X, y, key)
 
     # -- wire accounting ------------------------------------------------
     def bits_per_step(self) -> dict:
@@ -258,10 +278,11 @@ class DistributedCubicNewton:
         return {"uplink": up, "downlink": down}
 
     def _maybe_adapt(self, grad_norm: float,
-                     measured_delta: Optional[float] = None) -> None:
+                     measured_delta: Optional[float] = None) -> bool:
         """Feed adaptive compressors the host-side signals (gradient-norm
         plateau + the uplink channel's measured per-round δ); rebuild the
-        jitted step when any k changed (static shapes moved)."""
+        jitted step when any k changed (static shapes moved).  Returns
+        whether a rebuild happened (the round record's ``k_changed``)."""
         changed = False
         for name, ch in self.channels.items():
             comp = ch.compressor
@@ -273,6 +294,12 @@ class DistributedCubicNewton:
                 )
         if changed:
             self._rebuild_jit()
+        return changed
+
+    def _uplink_k(self) -> Optional[int]:
+        """The uplink's live adaptive k (None on non-adaptive wires)."""
+        comp = self.uplink.compressor if self.uplink is not None else None
+        return comp.k if isinstance(comp, AdaptiveTopK) else None
 
     def run(
         self,
@@ -285,16 +312,25 @@ class DistributedCubicNewton:
         grad_tol: Optional[float] = None,
         full_data=None,
         deadline: Optional[float] = None,
+        saddle_value: Optional[float] = None,
     ):
         """Run Algorithm 1 for ``n_steps`` (or until ‖∇f‖ ≤ grad_tol on the
         pooled data).  Returns (w, history dict); the history carries the
         exact integer uplink/downlink wire totals from the ledger plus the
-        per-step cumulative total (the bits-to-ε curve's x axis).
+        per-step cumulative total (the bits-to-ε curve's x axis), the
+        per-round measured δ̂, and the adaptive-k trajectory (``None``
+        entries on non-adaptive wires) — so sweep stores can pivot on
+        them.
 
         ``deadline`` (a ``time.monotonic()`` timestamp) cooperatively
         truncates the loop at the first round boundary past it — always
         after at least one round — with ``hist["truncated"] = True``;
-        the sweep runner's per-cell wall-time budget."""
+        the sweep runner's per-cell wall-time budget.
+
+        ``saddle_value`` (the problem's known f at its strict saddle, if
+        any) defines the saddle-escape flag: the round whose loss first
+        drops below it is the escape round (telemetry round records +
+        ``hist["saddle_escape_step"]``)."""
         import time as _time
 
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -309,7 +345,12 @@ class DistributedCubicNewton:
         ledger.reset()
         hist = {"loss": [], "grad_norm": [], "eval": [], "rounds": 0,
                 "bits_cumulative": [], "uplink_delta": [],
+                "k_trajectory": [], "saddle_escape_step": None,
                 "truncated": False}
+        tel = get_telemetry()
+        # f(w0) anchors the first round's model decrease; only computed
+        # when someone is listening (one extra loss eval)
+        prev_loss = float(lossf(w0, Xf, yf)) if tel.enabled else None
         w = w0
         v = jnp.zeros_like(w0)
         state = self.init_comm_state()
@@ -317,23 +358,49 @@ class DistributedCubicNewton:
             if deadline is not None and hist["loss"] \
                     and _time.monotonic() >= deadline:
                 hist["truncated"] = True
+                if tel.enabled:
+                    tel.event("newton.truncated", step=t)
                 break
             key, sub = jax.random.split(key)
+            k_live = self._uplink_k()      # the k this round transmits at
             w, v, state, info = self.step(w, X, y, sub, v, state)
             # re-read every step: adaptive compressors move k between steps
             bps = self.bits_per_step()
             ledger.record(uplink=bps["uplink"], downlink=bps["downlink"],
-                          rounds=self.rounds_per_step)
+                          rounds=self.rounds_per_step, label="round")
             hist["bits_cumulative"].append(ledger.total_bits)
             delta_hat = float(info["uplink_delta"])
             hist["uplink_delta"].append(delta_hat)
+            hist["k_trajectory"].append(k_live)
             gn = float(jnp.linalg.norm(gradf(w, Xf, yf)))
-            hist["loss"].append(float(lossf(w, Xf, yf)))
+            loss = float(lossf(w, Xf, yf))
+            hist["loss"].append(loss)
             hist["grad_norm"].append(gn)
             if eval_fn is not None:
                 hist["eval"].append(float(eval_fn(w)))
-            if grad_tol is not None and gn <= grad_tol:
+            hit_tol = grad_tol is not None and gn <= grad_tol
+            k_changed = False
+            if not hit_tol:
+                k_changed = self._maybe_adapt(gn, measured_delta=delta_hat)
+            escaped = (saddle_value is not None
+                       and hist["saddle_escape_step"] is None
+                       and loss < saddle_value)
+            if escaped:
+                hist["saddle_escape_step"] = t
+            if tel.enabled:
+                tel.round(RoundRecord(
+                    step=t, runtime="paper", loss=loss, grad_norm=gn,
+                    model_decrease=(None if prev_loss is None
+                                    else prev_loss - loss),
+                    uplink_delta=delta_hat, k=k_live, k_changed=k_changed,
+                    saddle_escape=escaped,
+                    rejected=rejected_from_keep(info["keep"]),
+                    attack=self.attack.name, alpha=self.attack.alpha,
+                    wire_uplink_bits=bps["uplink"],
+                    wire_downlink_bits=bps["downlink"],
+                ), name="newton.round")
+                prev_loss = loss
+            if hit_tol:
                 break
-            self._maybe_adapt(gn, measured_delta=delta_hat)
         hist.update(ledger.snapshot())
         return w, hist

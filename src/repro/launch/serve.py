@@ -22,6 +22,7 @@ from ..comm import DOWNLINK, TreeChannel, WireLedger
 from ..configs import get_config
 from ..data.synthetic import TokenStream
 from ..models import build_model
+from ..telemetry import get_telemetry
 
 
 def broadcast_params(params, downlink, *, seed=0, ledger=None):
@@ -47,14 +48,22 @@ def broadcast_params(params, downlink, *, seed=0, ledger=None):
 
 
 def run_serving(arch="gemma3-27b", preset="smoke", batch=4, prompt_len=32,
-                gen=32, seed=0, downlink=None):
+                gen=32, seed=0, downlink=None, telemetry_dir=None):
+    # memory-only telemetry when no dir was given: the latency histograms
+    # below aggregate (and print p50/p99) without any file I/O
+    tel = get_telemetry()
+    if not tel.enabled or telemetry_dir is not None:
+        tel.enable(telemetry_dir)
     cfg = get_config(arch)
     if preset == "smoke":
         cfg = cfg.reduced()
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
-    params, wire = broadcast_params(params, downlink, seed=seed)
+    with tel.span("serve.broadcast", arch=arch, downlink=downlink or "id"):
+        params, wire = broadcast_params(params, downlink, seed=seed)
+    tel.gauge("serve.broadcast_bits", wire["downlink_bits"],
+              full_precision_bits=wire["full_precision_bits"])
     print(f"[serve] downlink={downlink or 'identity'} "
           f"broadcast_bits={wire['downlink_bits']} "
           f"(full-precision {wire['full_precision_bits']}, "
@@ -71,22 +80,37 @@ def run_serving(arch="gemma3-27b", preset="smoke", batch=4, prompt_len=32,
     # the prefill_32k dry-run shape covers the batched-prefill compute path)
     t0 = time.time()
     logits = None
-    for t in range(prompt_len):
-        logits, cache = step(params, cache, prompts[:, t], jnp.int32(t))
+    with tel.span("serve.prefill", tokens=prompt_len, batch=batch):
+        for t in range(prompt_len):
+            tt0 = time.time()
+            logits, cache = step(params, cache, prompts[:, t], jnp.int32(t))
+            jax.block_until_ready(logits)
+            tel.observe("serve.prefill_step_s", time.time() - tt0)
     t_prefill = time.time() - t0
 
     out_tokens = []
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     t0 = time.time()
-    for t in range(prompt_len, max_len):
-        out_tokens.append(tok)
-        logits, cache = step(params, cache, tok, jnp.int32(t))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    with tel.span("serve.decode", tokens=gen, batch=batch):
+        for t in range(prompt_len, max_len):
+            out_tokens.append(tok)
+            tt0 = time.time()
+            logits, cache = step(params, cache, tok, jnp.int32(t))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            jax.block_until_ready(tok)
+            tel.observe("serve.decode_step_s", time.time() - tt0)
     t_dec = time.time() - t0
     toks = jnp.stack(out_tokens, 1)
     print(f"[serve] arch={cfg.name} batch={batch} prefill={prompt_len}tok "
           f"({t_prefill:.2f}s) decode={gen}tok ({t_dec:.2f}s, "
           f"{batch*gen/max(t_dec,1e-9):.1f} tok/s)")
+    lat = tel.histogram("serve.decode_step_s")
+    if lat:
+        print(f"[serve] decode latency p50={lat['p50']*1e3:.1f}ms "
+              f"p99={lat['p99']*1e3:.1f}ms over {lat['count']} steps")
+    if telemetry_dir is not None:
+        tel.flush()
+        print(f"[serve] telemetry → {telemetry_dir}")
     return toks
 
 
@@ -100,9 +124,12 @@ def main(argv=None):
     ap.add_argument("--downlink", default=None,
                     help="compress the param broadcast through a downlink "
                          "TreeChannel (repro.compression spec, e.g. 'int8')")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write telemetry (events.jsonl + trace.json) here; "
+                         "latency histograms aggregate in memory either way")
     args = ap.parse_args(argv)
     run_serving(args.arch, args.preset, args.batch, args.prompt_len, args.gen,
-                downlink=args.downlink)
+                downlink=args.downlink, telemetry_dir=args.telemetry_dir)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,8 @@ from ..core.distributed import (
 )
 from ..data import WorkerBatcher
 from ..models import build_model
+from ..telemetry import (RoundRecord, compile_scope, get_telemetry,
+                         rejected_from_keep)
 
 
 def scale_config(cfg, preset: str):
@@ -83,7 +85,11 @@ def run_training(
     seed: int = 0,
     ckpt_dir: str | None = None,
     log_every: int = 10,
+    telemetry_dir: str | None = None,
 ):
+    tel = get_telemetry()
+    if telemetry_dir is not None:
+        tel.enable(telemetry_dir)
     cfg = scale_config(get_config(arch), preset)
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -131,19 +137,37 @@ def run_training(
 
     batcher = WorkerBatcher(cfg, m_workers, m_workers * per_worker_batch, seq_len, seed)
     history = []
+    prev_loss = None
     t0 = time.time()
     for it in range(steps):
         key, sub = jax.random.split(key)
-        if comm_state is not None:
-            params, metrics, comm_state = step(params, batcher(it), sub, comm_state)
-        else:
-            params, metrics = step(params, batcher(it), sub)
+        # the compile-counter attributes every (re)trace of the mesh step
+        # to this scope (host-side contextvar, never traced)
+        with compile_scope("mesh.step"):
+            if comm_state is not None:
+                params, metrics, comm_state = step(params, batcher(it), sub, comm_state)
+            else:
+                params, metrics = step(params, batcher(it), sub)
         if wire_bits is not None:
             ledger.record(uplink=wire_bits["uplink"],
                           downlink=wire_bits["downlink"],
-                          rounds=2 if two_round else 1)
+                          rounds=2 if two_round else 1, label="round")
         loss = float(metrics["loss"])
         history.append(loss)
+        if tel.enabled:
+            tel.round(RoundRecord(
+                step=it, runtime="mesh", loss=loss,
+                model_decrease=(None if prev_loss is None
+                                else prev_loss - loss),
+                uplink_delta=(float(metrics["uplink_delta"])
+                              if "uplink_delta" in metrics else None),
+                rejected=(rejected_from_keep(metrics["kept"])
+                          if "kept" in metrics else ()),
+                attack=attack, alpha=alpha,
+                wire_uplink_bits=(wire_bits or {}).get("uplink"),
+                wire_downlink_bits=(wire_bits or {}).get("downlink"),
+            ), name="train.round")
+            prev_loss = loss
         if it % log_every == 0 or it == steps - 1:
             dt = time.time() - t0
             wire = (f" wire_up={ledger.uplink_bits} wire_down={ledger.downlink_bits}"
@@ -157,6 +181,9 @@ def run_training(
         save_checkpoint(ckpt_dir, params, steps, {"loss": history[-1]})
     if wire_bits is not None:
         print(f"[train] wire ledger (exact ints): {ledger.snapshot()}")
+    if telemetry_dir is not None:
+        tel.flush()
+        print(f"[train] telemetry → {telemetry_dir}")
     return params, history
 
 
@@ -192,6 +219,9 @@ def main(argv=None):
                     choices=["none", "ef", "ef21"],
                     help="mesh-scale EF (threads channel state through the step)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write telemetry (per-round records, wire events, "
+                         "compile spans, trace.json) into this directory")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     _, hist = run_training(**{k.replace("-", "_"): v for k, v in vars(args).items()})

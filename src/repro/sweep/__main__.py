@@ -24,6 +24,7 @@ from . import grids, runner
 from . import store as store_mod
 from .grid import plan_grid
 from .report import report as report_store
+from .report import telemetry_report
 
 
 def _build_plan(args):
@@ -83,6 +84,10 @@ def _add_grid_args(p, with_run=False):
         p.add_argument("--retry-failed", action="store_true")
         p.add_argument("--retry-truncated", action="store_true",
                        help="re-run cells a previous --budget-s cut short")
+        p.add_argument("--telemetry-dir", default=None,
+                       help="enable repro.telemetry: per-cell/shard spans "
+                            "+ wire/compile events into DIR (events.jsonl "
+                            "+ trace.json; use one DIR per shard)")
 
 
 def main(argv=None) -> int:
@@ -101,9 +106,13 @@ def main(argv=None) -> int:
     p_merge.add_argument("--out", required=True)
 
     p_rep = sub.add_parser("report", help="pivot a store into the tables")
-    p_rep.add_argument("store")
+    p_rep.add_argument("store", nargs="?", default=None)
     p_rep.add_argument("--eps", default="0.3,0.1,0.05",
                        help="comma list of ε thresholds")
+    p_rep.add_argument("--telemetry", metavar="EVENTS_JSONL", default=None,
+                       help="summarize a telemetry events.jsonl stream "
+                            "(span timings, cell outcomes, wire/compile "
+                            "totals) — the live sweep progress view")
 
     args = ap.parse_args(argv)
 
@@ -135,6 +144,10 @@ def main(argv=None) -> int:
             stem = (args.preset if not args.grid else
                     os.path.splitext(os.path.basename(args.grid))[0])
             path = f"results/sweep/{stem}.jsonl"
+        if args.telemetry_dir:
+            from ..telemetry import get_telemetry
+
+            get_telemetry().enable(args.telemetry_dir)
         st = store_mod.ResultStore(path)
         print(plan.summary() + f"; shard {idx}/{num} → {path}")
         summary = runner.run_plan(
@@ -146,6 +159,11 @@ def main(argv=None) -> int:
         print(f"[sweep] done: built={summary['built']} "
               f"cached={summary['cached']} failed={summary['failed']} "
               f"(shard total {summary['total']})")
+        if args.telemetry_dir:
+            from ..telemetry import get_telemetry
+
+            get_telemetry().flush()
+            print(f"[sweep] telemetry → {args.telemetry_dir}")
         return 1 if summary["failed"] else 0
 
     if args.cmd == "merge":
@@ -154,8 +172,15 @@ def main(argv=None) -> int:
         return 0
 
     if args.cmd == "report":
-        eps = tuple(float(e) for e in args.eps.split(","))
-        report_store(store_mod.ResultStore(args.store), eps_grid=eps)
+        if args.store is None and args.telemetry is None:
+            raise SystemExit("report needs a store path and/or --telemetry")
+        if args.telemetry is not None:
+            telemetry_report(args.telemetry)
+        if args.store is not None:
+            if args.telemetry is not None:
+                print()
+            eps = tuple(float(e) for e in args.eps.split(","))
+            report_store(store_mod.ResultStore(args.store), eps_grid=eps)
         return 0
 
     return 2

@@ -1,6 +1,6 @@
 """Summarizer: pivot a result store into the paper's tables.
 
-Three pivots, each a pure function of the store's ``"ok"`` records:
+Four pivots, each a pure function of the store's ``"ok"`` records:
 
 * :func:`resilience_table` — the attack × aggregator frontier (Figs. 1-2
   / the byzantine_attacks example table): final loss (or final test
@@ -10,12 +10,19 @@ Three pivots, each a pure function of the store's ``"ok"`` records:
   round counts);
 * :func:`bits_to_eps` — exact cumulative wire bits until ‖∇f‖ ≤ ε (the
   communication-efficiency axis), straight off the ledger ints stored
-  with every record.
+  with every record;
+* :func:`wire_table` — per-cell wire adaptivity off the persisted
+  per-round ``uplink_delta`` / ``k_trajectory`` series: mean / final
+  measured δ̂, the k the schedule started and ended at, and how many
+  times it moved.
 
 ``render_table`` turns rows into the aligned ASCII the CLI prints.
+:func:`telemetry_report` is the live progress view over a telemetry
+``events.jsonl`` stream (``python -m repro.sweep report --telemetry``).
 """
 from __future__ import annotations
 
+import json
 from collections import OrderedDict
 from typing import Iterable, Optional
 
@@ -111,6 +118,31 @@ def eps_table(records: Iterable[dict], eps_grid=(0.3, 0.1, 0.05)) -> list[dict]:
     return rows
 
 
+def wire_table(records: Iterable[dict]) -> list[dict]:
+    """Wire-adaptivity pivot: per-cell measured δ̂ and the adaptive-k
+    trajectory the runtimes persist (``hist["uplink_delta"]`` /
+    ``hist["k_trajectory"]``).  Cells on a non-adaptive wire report
+    their δ̂ series with k columns empty."""
+    rows = []
+    for rec in records:
+        s = _spec(rec)
+        m = rec.get("metrics", {})
+        deltas = [d for d in (m.get("uplink_delta") or []) if d is not None]
+        ks = [k for k in (m.get("k_trajectory") or []) if k is not None]
+        rows.append({
+            "problem": s.get("problem"),
+            "compressor": _comp_label(rec),
+            "attack": str(s.get("attack", "none")).partition(":")[0],
+            "delta_mean": (sum(deltas) / len(deltas)) if deltas else None,
+            "delta_final": deltas[-1] if deltas else None,
+            "k_start": ks[0] if ks else None,
+            "k_final": ks[-1] if ks else None,
+            "k_moves": (sum(1 for a, b in zip(ks, ks[1:]) if a != b)
+                        if ks else None),
+        })
+    return rows
+
+
 # ---------------------------------------------------------------- render
 def _fmt(v) -> str:
     if v is None:
@@ -151,4 +183,77 @@ def report(store, eps_grid=(0.3, 0.1, 0.05), printer=print) -> dict:
     eps_rows = eps_table(recs, eps_grid)
     printer("\n## rounds-to-ε / bits-to-ε")
     printer(render_table(eps_rows))
-    return {"resilience": frontier, "eps": eps_rows}
+    wire_rows = wire_table(recs)
+    if any(r["delta_mean"] is not None or r["k_start"] is not None
+           for r in wire_rows):
+        printer("\n## wire adaptivity (measured δ̂ / adaptive-k trajectory)")
+        printer(render_table(wire_rows))
+    else:
+        wire_rows = []
+    return {"resilience": frontier, "eps": eps_rows, "wire": wire_rows}
+
+
+# ------------------------------------------------------- telemetry view
+def telemetry_report(path: str, printer=print) -> dict:
+    """Progress view over a telemetry ``events.jsonl`` stream: span
+    timings by name (the sweep's build/run/store phases), cell outcomes,
+    compile activity, and exact wire totals.  Tolerant of a live,
+    partially-written stream (bad lines are counted, not fatal)."""
+    spans: "OrderedDict[str, dict]" = OrderedDict()
+    cells = {"ok": 0, "failed": 0, "truncated": 0}
+    compile_n = 0
+    compile_s = 0.0
+    wire = {"uplink": 0, "downlink": 0, "rounds": 0}
+    rounds = 0
+    bad = 0
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except ValueError:
+                bad += 1
+                continue
+            kind, name = ev.get("kind"), ev.get("name")
+            if kind == "span":
+                agg = spans.setdefault(name, {"count": 0, "total_s": 0.0,
+                                              "errors": 0})
+                agg["count"] += 1
+                agg["total_s"] += float(ev.get("dur_s") or 0.0)
+                if (ev.get("args") or {}).get("status") == "error":
+                    agg["errors"] += 1
+                if name == "sweep.cell":
+                    cells["ok"] += 1
+            elif kind == "event" and name == "sweep.cell.failed":
+                cells["failed"] += 1
+                cells["ok"] -= 1    # its sweep.cell span counted above
+            elif kind == "event" and name == "sweep.cell.truncated":
+                cells["truncated"] += 1
+            elif kind == "compile":
+                compile_n += 1
+                compile_s += float(ev.get("dur_s") or 0.0)
+            elif kind == "wire":
+                wire["uplink"] += int(ev.get("uplink") or 0)
+                wire["downlink"] += int(ev.get("downlink") or 0)
+                wire["rounds"] += int(ev.get("rounds") or 0)
+            elif kind == "round":
+                rounds += 1
+    span_rows = [{"span": n, "count": a["count"],
+                  "total_s": round(a["total_s"], 3),
+                  "mean_s": round(a["total_s"] / a["count"], 4),
+                  "errors": a["errors"]}
+                 for n, a in spans.items()]
+    printer(f"# telemetry report — {path}"
+            + (f" ({bad} unparseable lines)" if bad else ""))
+    printer(f"cells: {cells['ok']} ok, {cells['failed']} failed, "
+            f"{cells['truncated']} truncated; {rounds} round records")
+    printer(f"compile: {compile_n} events, {compile_s:.2f}s total")
+    printer(f"wire: {wire['uplink']} uplink bits, {wire['downlink']} "
+            f"downlink bits over {wire['rounds']} rounds")
+    if span_rows:
+        printer("\n## spans")
+        printer(render_table(span_rows))
+    return {"spans": span_rows, "cells": cells, "wire": wire,
+            "compiles": compile_n, "rounds": rounds, "bad_lines": bad}

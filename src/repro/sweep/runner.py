@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from .grid import PlanEntry, SweepPlan
 from .store import ResultStore
+from ..telemetry import get_telemetry
 
 
 # ---------------------------------------------------------------- shard
@@ -45,8 +46,11 @@ def _build_and_run(entry: PlanEntry, deadline: Optional[float]) -> dict:
     Split out so tests can inject failures, and so a future async/remote
     executor can replace just this function.
     """
-    exp = entry.spec.build()
-    w, hist = exp.run(entry.n_steps, deadline=deadline)
+    tel = get_telemetry()
+    with tel.span("sweep.cell.build", hash=entry.hash):
+        exp = entry.spec.build()
+    with tel.span("sweep.cell.run", hash=entry.hash):
+        w, hist = exp.run(entry.n_steps, deadline=deadline)
     metrics = {k: v for k, v in hist.items()}
     w_star = getattr(exp.problem, "w_star", None)
     if w_star is not None and isinstance(w, jax.Array) and w.ndim == 1 \
@@ -81,44 +85,58 @@ def run_plan(
     short, instead of treating either as done.
     """
     log = log or (lambda s: None)
+    tel = get_telemetry()
     entries = shard_entries(plan.entries, shard_index, num_shards)
     built = cached = failed = 0
-    for entry in entries:
-        h = entry.hash
-        prior = store.get(h)
-        done = prior is not None
-        if done and retry_failed and prior.get("status") == "failed":
-            done = False
-        if done and retry_truncated \
-                and prior.get("metrics", {}).get("truncated"):
-            done = False
-        if done:
-            cached += 1
-            continue
-        if limit is not None and built >= limit:
-            break
-        deadline = (time.monotonic() + time_budget_s
-                    if time_budget_s is not None else None)
-        t0 = time.monotonic()
-        record = {"hash": h, "spec": entry.spec.to_dict(),
-                  "n_steps": entry.n_steps}
-        try:
-            record["status"] = "ok"
-            record["metrics"] = _build_and_run(entry, deadline)
-        except Exception as e:   # noqa: BLE001 — failure isolation is the point
-            record["status"] = "failed"
-            record["error"] = f"{type(e).__name__}: {e}"
-            log(f"[sweep] FAILED {h} {entry.spec.aggregator}/"
-                f"{entry.spec.attack}: {record['error']}")
-            log(traceback.format_exc(limit=3))
-            failed += 1
-        else:
-            built += 1
-        record["wall_time_s"] = round(time.monotonic() - t0, 3)
-        store.append(record)
-        log(f"[sweep] {record['status']} {h} "
-            f"problem={entry.spec.problem} agg={entry.spec.aggregator} "
-            f"attack={entry.spec.attack} comp={entry.spec.compressor} "
-            f"({record['wall_time_s']:.1f}s)")
+    with tel.span("sweep.shard", shard=shard_index, num_shards=num_shards,
+                  cells=len(entries)):
+        for entry in entries:
+            h = entry.hash
+            prior = store.get(h)
+            done = prior is not None
+            if done and retry_failed and prior.get("status") == "failed":
+                done = False
+            if done and retry_truncated \
+                    and prior.get("metrics", {}).get("truncated"):
+                done = False
+            if done:
+                cached += 1
+                continue
+            if limit is not None and built >= limit:
+                break
+            deadline = (time.monotonic() + time_budget_s
+                        if time_budget_s is not None else None)
+            t0 = time.monotonic()
+            record = {"hash": h, "spec": entry.spec.to_dict(),
+                      "n_steps": entry.n_steps}
+            with tel.span("sweep.cell", hash=h,
+                          problem=entry.spec.problem,
+                          aggregator=entry.spec.aggregator,
+                          attack=entry.spec.attack):
+                try:
+                    record["status"] = "ok"
+                    record["metrics"] = _build_and_run(entry, deadline)
+                except Exception as e:   # noqa: BLE001 — failure isolation is the point
+                    record["status"] = "failed"
+                    record["error"] = f"{type(e).__name__}: {e}"
+                    log(f"[sweep] FAILED {h} {entry.spec.aggregator}/"
+                        f"{entry.spec.attack}: {record['error']}")
+                    log(traceback.format_exc(limit=3))
+                    failed += 1
+                    if tel.enabled:
+                        tel.event("sweep.cell.failed", hash=h,
+                                  error=record["error"])
+                else:
+                    built += 1
+                    if tel.enabled \
+                            and record["metrics"].get("truncated"):
+                        tel.event("sweep.cell.truncated", hash=h)
+            record["wall_time_s"] = round(time.monotonic() - t0, 3)
+            with tel.span("sweep.cell.store", hash=h):
+                store.append(record)
+            log(f"[sweep] {record['status']} {h} "
+                f"problem={entry.spec.problem} agg={entry.spec.aggregator} "
+                f"attack={entry.spec.attack} comp={entry.spec.compressor} "
+                f"({record['wall_time_s']:.1f}s)")
     return {"built": built, "cached": cached, "failed": failed,
             "shard": (shard_index, num_shards), "total": len(entries)}

@@ -1,0 +1,49 @@
+"""repro.telemetry — zero-cost-when-disabled instrumentation.
+
+Round-level tracing, wire/compile/aggregation metrics, and a
+Perfetto-compatible timeline across both runtimes, the sweep engine,
+and serving.  See README.md in this directory for the event schema and
+the enabling story; the one-line version:
+
+    REPRO_TELEMETRY_DIR=results/telemetry python examples/quickstart.py
+    python -m repro.telemetry validate results/telemetry/events.jsonl \
+        --trace results/telemetry/trace.json --check-wire
+    # then load results/telemetry/trace.json at https://ui.perfetto.dev
+"""
+from .compile import (
+    ANY,
+    BACKEND_EVENT,
+    TRACE_EVENT,
+    CompileCounter,
+    compile_scope,
+    record_retrace,
+)
+from .core import ENV_DIR, Telemetry, device_event, get_telemetry
+from .records import RoundRecord, rejected_from_keep
+from .schema import (
+    EVENT_SCHEMA,
+    KINDS,
+    SCHEMA_VERSION,
+    validate_event,
+    validate_stream,
+)
+
+__all__ = [
+    "ANY",
+    "BACKEND_EVENT",
+    "TRACE_EVENT",
+    "CompileCounter",
+    "compile_scope",
+    "record_retrace",
+    "ENV_DIR",
+    "Telemetry",
+    "device_event",
+    "get_telemetry",
+    "RoundRecord",
+    "rejected_from_keep",
+    "EVENT_SCHEMA",
+    "KINDS",
+    "SCHEMA_VERSION",
+    "validate_event",
+    "validate_stream",
+]

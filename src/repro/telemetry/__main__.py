@@ -1,0 +1,127 @@
+"""CLI: ``python -m repro.telemetry validate <events.jsonl>``.
+
+Validates every emitted event against the schema, optionally parses the
+Chrome trace and cross-checks wire events against ledger totals — the
+telemetry-smoke CI job's teeth.
+
+    python -m repro.telemetry validate results/telemetry/events.jsonl \
+        --trace results/telemetry/trace.json --check-wire
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .schema import validate_stream
+
+
+def _load_events(path: str) -> list:
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+def check_wire_exactness(events: list) -> list:
+    """Every ledger snapshot's totals must equal the exact sum of the
+    wire events sharing its ``ledger_id`` (the acceptance criterion:
+    per-transmit bit events sum to the WireLedger's integer totals).
+    Returns problem strings (empty ⇒ exact)."""
+    sums: dict[int, dict] = {}
+    for ev in events:
+        if ev.get("kind") == "wire":
+            slot = sums.setdefault(ev["ledger_id"],
+                                   {"uplink": 0, "downlink": 0, "rounds": 0})
+            slot["uplink"] += ev["uplink"]
+            slot["downlink"] += ev["downlink"]
+            slot["rounds"] += ev["rounds"]
+    problems = []
+    n_checked = 0
+    for ev in events:
+        if ev.get("kind") != "ledger":
+            continue
+        n_checked += 1
+        lid = ev["ledger_id"]
+        got = sums.get(lid, {"uplink": 0, "downlink": 0, "rounds": 0})
+        for wire_key, ledger_key in (("uplink", "uplink_bits"),
+                                     ("downlink", "downlink_bits"),
+                                     ("rounds", "rounds")):
+            if got[wire_key] != ev[ledger_key]:
+                problems.append(
+                    f"ledger {lid}: sum(wire.{wire_key}) = "
+                    f"{got[wire_key]} but snapshot {ledger_key} = "
+                    f"{ev[ledger_key]}"
+                )
+    if n_checked == 0:
+        problems.append("--check-wire: no ledger snapshot events found")
+    return problems
+
+
+def check_chrome_trace(path: str) -> list:
+    """``trace.json`` must parse and look like Chrome Trace Event
+    Format (what Perfetto's JSON importer requires)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"trace {path}: {e}"]
+    problems = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"trace {path}: no 'traceEvents' array"]
+    for i, ev in enumerate(events):
+        for key in ("name", "ph", "ts", "pid", "tid"):
+            if key not in ev:
+                problems.append(f"trace event {i}: missing {key!r}")
+                break
+        else:
+            if ev["ph"] == "X" and "dur" not in ev:
+                problems.append(f"trace event {i}: complete event "
+                                f"without 'dur'")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.telemetry")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_val = sub.add_parser("validate",
+                           help="schema-validate an events.jsonl stream")
+    p_val.add_argument("events", help="path to events.jsonl")
+    p_val.add_argument("--trace", default=None,
+                       help="also check this trace.json parses as "
+                            "Chrome Trace Event Format")
+    p_val.add_argument("--check-wire", action="store_true",
+                       help="assert wire events sum exactly to each "
+                            "ledger snapshot")
+    args = ap.parse_args(argv)
+
+    with open(args.events) as f:
+        problems = [f"line {ln}: {msg}"
+                    for ln, msg in validate_stream(f)]
+    events = [] if problems else _load_events(args.events)
+    if not problems:
+        print(f"[telemetry] {args.events}: {len(events)} events, "
+              f"schema-valid")
+    if not problems and args.check_wire:
+        problems += check_wire_exactness(events)
+        if not problems:
+            n = sum(1 for e in events if e.get("kind") == "ledger")
+            print(f"[telemetry] wire events sum exactly to all "
+                  f"{n} ledger snapshot(s)")
+    if args.trace:
+        trace_problems = check_chrome_trace(args.trace)
+        if not trace_problems:
+            print(f"[telemetry] {args.trace}: parses as Chrome trace "
+                  f"(Perfetto-loadable)")
+        problems += trace_problems
+    for p in problems:
+        print(f"[telemetry] INVALID: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

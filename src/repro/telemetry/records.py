@@ -1,0 +1,62 @@
+"""Structured per-round record both runtimes emit.
+
+A :class:`RoundRecord` is the telemetry view of ONE communication round:
+the trajectory quantities the paper's claims are about (loss, gradient
+norm, model decrease, saddle-escape), the wire quantities (measured δ̂,
+the adaptive-k schedule's live k, exact per-round bits), and the
+resilience quantities (which workers the aggregator rejected, what
+attack was injected).  ``None`` fields are simply omitted from the
+emitted event — the mesh runtime has no cheap global gradient norm, the
+paper runtime has no staleness, and the schema stays one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """One communication round, as seen from the host loop."""
+
+    step: int                                  # 0-based round index
+    runtime: str = "paper"                     # "paper" | "mesh"
+    loss: Optional[float] = None
+    grad_norm: Optional[float] = None
+    model_decrease: Optional[float] = None     # f(w_t) − f(w_{t+1})
+    uplink_delta: Optional[float] = None       # measured δ̂ this round
+    k: Optional[int] = None                    # adaptive-k live k
+    k_changed: bool = False                    # schedule moved this round
+    saddle_escape: bool = False                # crossed below saddle_value
+    rejected: Sequence[int] = ()               # aggregator-rejected workers
+    attack: str = "none"
+    alpha: float = 0.0
+    wire_uplink_bits: Optional[int] = None     # exact bits this round
+    wire_downlink_bits: Optional[int] = None
+
+    def to_fields(self) -> dict:
+        """Flatten to JSONL event fields (``None`` dropped, floats
+        coerced so jnp scalars never leak into the JSON encoder)."""
+        out = {"step": int(self.step), "runtime": self.runtime,
+               "attack": self.attack, "alpha": float(self.alpha)}
+        for key in ("loss", "grad_norm", "model_decrease", "uplink_delta"):
+            v = getattr(self, key)
+            if v is not None:
+                out[key] = float(v)
+        if self.k is not None:
+            out["k"] = int(self.k)
+        out["k_changed"] = bool(self.k_changed)
+        out["saddle_escape"] = bool(self.saddle_escape)
+        out["rejected"] = [int(i) for i in self.rejected]
+        out["n_rejected"] = len(out["rejected"])
+        if self.wire_uplink_bits is not None:
+            out["wire_uplink_bits"] = int(self.wire_uplink_bits)
+        if self.wire_downlink_bits is not None:
+            out["wire_downlink_bits"] = int(self.wire_downlink_bits)
+        return out
+
+
+def rejected_from_keep(keep) -> list:
+    """Worker indices the aggregator rejected, from its 0/1 keep mask
+    (host-side; call on a concrete metrics value, never in a trace)."""
+    return [i for i, kept in enumerate(keep) if not float(kept)]

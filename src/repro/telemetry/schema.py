@@ -1,0 +1,166 @@
+"""Event schema for the telemetry JSONL stream (schema-versioned).
+
+Every line of ``events.jsonl`` is one JSON object.  The stream is
+append-only and mergeable like the sweep store: concatenating two
+streams yields a valid stream (events carry their own wall-clock
+timestamps; no line references another line by position).
+
+Base keys (every event):
+
+* ``v``    — schema version (int, == :data:`SCHEMA_VERSION`)
+* ``kind`` — one of :data:`KINDS`
+* ``name`` — dotted event name (``"sweep.cell"``, ``"newton.round"``)
+* ``ts``   — seconds since the process enabled telemetry (monotonic)
+* ``wall`` — wall-clock unix seconds (for cross-process merge ordering)
+
+Per-kind required keys (on top of the base):
+
+* ``span``    — ``dur_s`` (float ≥ 0); optional ``args`` dict
+* ``counter`` — ``value`` (number), the post-increment running total
+* ``gauge``   — ``value`` (number)
+* ``hist``    — ``value`` (number), one observation
+* ``round``   — ``step`` (int ≥ 0); the flattened
+  :class:`~repro.telemetry.RoundRecord` fields ride as optional keys
+* ``wire``    — ``ledger_id`` (int), ``uplink`` (int ≥ 0),
+  ``downlink`` (int ≥ 0), ``rounds`` (int ≥ 0): ONE ledger-record call,
+  exact integer bits
+* ``ledger``  — ``ledger_id``, ``uplink_bits``, ``downlink_bits``,
+  ``total_bits``, ``rounds``: a ledger snapshot (end-of-run totals);
+  the wire events with the same ``ledger_id`` must sum to it exactly
+  (checked by ``python -m repro.telemetry validate --check-wire``)
+* ``compile`` — ``event`` (the JAX monitoring event tail, e.g.
+  ``backend_compile``), ``dur_s``; optional ``scope`` (the
+  :func:`~repro.telemetry.compile_scope` label active during the
+  compile) and ``trigger``/``shape_key`` on explicit re-trace events
+* ``event``   — free-form (base keys only)
+
+The validator is hand-rolled (no jsonschema dependency); the
+:data:`EVENT_SCHEMA` dict is the same contract in JSON-Schema notation
+for documentation and external tooling.
+"""
+from __future__ import annotations
+
+from numbers import Number
+
+SCHEMA_VERSION = 1
+
+KINDS = ("event", "span", "counter", "gauge", "hist", "round", "wire",
+         "ledger", "compile")
+
+#: JSON-Schema rendering of the contract (documentation / external tools).
+EVENT_SCHEMA = {
+    "$schema": "http://json-schema.org/draft-07/schema#",
+    "title": "repro.telemetry event",
+    "type": "object",
+    "required": ["v", "kind", "name", "ts", "wall"],
+    "properties": {
+        "v": {"const": SCHEMA_VERSION},
+        "kind": {"enum": list(KINDS)},
+        "name": {"type": "string", "minLength": 1},
+        "ts": {"type": "number", "minimum": 0},
+        "wall": {"type": "number"},
+        "dur_s": {"type": "number", "minimum": 0},
+        "value": {"type": ["number", "integer"]},
+        "step": {"type": "integer", "minimum": 0},
+        "ledger_id": {"type": "integer", "minimum": 0},
+        "uplink": {"type": "integer", "minimum": 0},
+        "downlink": {"type": "integer", "minimum": 0},
+        "rounds": {"type": "integer", "minimum": 0},
+        "uplink_bits": {"type": "integer", "minimum": 0},
+        "downlink_bits": {"type": "integer", "minimum": 0},
+        "total_bits": {"type": "integer", "minimum": 0},
+        "event": {"type": "string"},
+        "args": {"type": "object"},
+    },
+    "allOf": [
+        {"if": {"properties": {"kind": {"const": "span"}}},
+         "then": {"required": ["dur_s"]}},
+        {"if": {"properties": {"kind": {"enum": ["counter", "gauge", "hist"]}}},
+         "then": {"required": ["value"]}},
+        {"if": {"properties": {"kind": {"const": "round"}}},
+         "then": {"required": ["step"]}},
+        {"if": {"properties": {"kind": {"const": "wire"}}},
+         "then": {"required": ["ledger_id", "uplink", "downlink", "rounds"]}},
+        {"if": {"properties": {"kind": {"const": "ledger"}}},
+         "then": {"required": ["ledger_id", "uplink_bits", "downlink_bits",
+                               "total_bits", "rounds"]}},
+        {"if": {"properties": {"kind": {"const": "compile"}}},
+         "then": {"required": ["event", "dur_s"]}},
+    ],
+}
+
+_REQUIRED_BY_KIND = {
+    "span": ("dur_s",),
+    "counter": ("value",),
+    "gauge": ("value",),
+    "hist": ("value",),
+    "round": ("step",),
+    "wire": ("ledger_id", "uplink", "downlink", "rounds"),
+    "ledger": ("ledger_id", "uplink_bits", "downlink_bits",
+               "total_bits", "rounds"),
+    "compile": ("event", "dur_s"),
+    "event": (),
+}
+
+_NONNEG_INTS = ("step", "ledger_id", "uplink", "downlink", "rounds",
+                "uplink_bits", "downlink_bits", "total_bits")
+
+
+def validate_event(obj) -> list:
+    """Return a list of problem strings (empty ⇒ the event is valid)."""
+    errors = []
+    if not isinstance(obj, dict):
+        return [f"event must be an object, got {type(obj).__name__}"]
+    if obj.get("v") != SCHEMA_VERSION:
+        errors.append(f"v must be {SCHEMA_VERSION}, got {obj.get('v')!r}")
+    kind = obj.get("kind")
+    if kind not in KINDS:
+        errors.append(f"kind must be one of {KINDS}, got {kind!r}")
+    name = obj.get("name")
+    if not isinstance(name, str) or not name:
+        errors.append(f"name must be a non-empty string, got {name!r}")
+    for key in ("ts", "wall"):
+        if not isinstance(obj.get(key), Number) \
+                or isinstance(obj.get(key), bool):
+            errors.append(f"{key} must be a number, got {obj.get(key)!r}")
+    for key in _REQUIRED_BY_KIND.get(kind, ()):
+        if key not in obj:
+            errors.append(f"kind={kind!r} requires key {key!r}")
+    if "dur_s" in obj:
+        if not isinstance(obj["dur_s"], Number) or isinstance(
+                obj["dur_s"], bool) or obj["dur_s"] < 0:
+            errors.append(f"dur_s must be a number ≥ 0, got {obj['dur_s']!r}")
+    if "value" in obj:
+        if not isinstance(obj["value"], Number) \
+                or isinstance(obj["value"], bool):
+            errors.append(f"value must be a number, got {obj['value']!r}")
+    for key in _NONNEG_INTS:
+        if key in obj and (not isinstance(obj[key], int)
+                           or isinstance(obj[key], bool) or obj[key] < 0):
+            errors.append(f"{key} must be a non-negative int, "
+                          f"got {obj[key]!r}")
+    if "args" in obj and not isinstance(obj["args"], dict):
+        errors.append(f"args must be an object, got {type(obj['args'])}")
+    return errors
+
+
+def validate_stream(lines) -> list:
+    """Validate an iterable of JSONL lines; returns
+    ``[(line_no, problem), …]`` (empty ⇒ the whole stream is valid).
+    Blank lines are skipped; a truncated final line (a live writer) is
+    reported so callers can choose to tolerate it."""
+    import json
+
+    problems = []
+    for i, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            problems.append((i, f"not JSON: {e}"))
+            continue
+        for err in validate_event(obj):
+            problems.append((i, err))
+    return problems

@@ -1,0 +1,108 @@
+"""Telemetry sinks: append-only JSONL events + a Chrome-trace timeline.
+
+Two sinks, both host-side and flush-on-demand:
+
+* :class:`JsonlSink` — one schema-versioned JSON object per line,
+  appended (never rewritten), so sequential processes sharing a path
+  interleave whole lines and streams merge by concatenation, like the
+  sweep store's shard files.
+* :class:`ChromeTraceSink` — accumulates Chrome Trace Event Format
+  records and writes ``trace.json`` on flush: ``{"traceEvents": […]}``
+  with ``ph: "X"`` complete events for spans, ``ph: "C"`` counter
+  samples, and ``ph: "i"`` instants — the JSON flavour both
+  ``chrome://tracing`` and Perfetto (https://ui.perfetto.dev) load
+  directly.
+
+Timestamps: spans carry microsecond ``ts``/``dur`` on the process-local
+monotonic clock (Perfetto only needs self-consistency within one file);
+JSONL events carry both the monotonic ``ts`` and unix ``wall`` seconds
+so merged multi-process streams can still be ordered.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+from .schema import SCHEMA_VERSION
+
+
+def _canonical(obj) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      default=str)
+
+
+class JsonlSink:
+    """Append-only JSONL event stream (one sink per path)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        # touch so a zero-event run still leaves a valid (empty) stream
+        with open(path, "a"):
+            pass
+
+    def emit(self, event: dict) -> None:
+        line = _canonical(event) + "\n"
+        with self._lock, open(self.path, "a") as f:
+            f.write(line)
+
+    def flush(self) -> None:  # appended per-event; nothing buffered
+        pass
+
+
+class ChromeTraceSink:
+    """Chrome Trace Event Format accumulator → ``trace.json`` on flush.
+
+    The file is rewritten whole on every flush (the format is one JSON
+    document, not a log), so concurrent processes should use distinct
+    paths — the CLI's ``--telemetry-dir`` does this per shard.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._events: list[dict] = []
+        self._pid = os.getpid()
+
+    def _base(self, name: str, ts_s: float) -> dict:
+        return {"name": name, "pid": self._pid,
+                "tid": threading.get_ident() & 0xFFFF,
+                "ts": round(ts_s * 1e6, 3)}
+
+    def span(self, name: str, ts_s: float, dur_s: float,
+             args: dict | None = None) -> None:
+        ev = self._base(name, ts_s)
+        ev.update(ph="X", dur=round(dur_s * 1e6, 3))
+        if args:
+            ev["args"] = {k: str(v) for k, v in args.items()}
+        with self._lock:
+            self._events.append(ev)
+
+    def counter(self, name: str, ts_s: float, value) -> None:
+        ev = self._base(name, ts_s)
+        ev.update(ph="C", args={name.rpartition(".")[2] or name: value})
+        with self._lock:
+            self._events.append(ev)
+
+    def instant(self, name: str, ts_s: float,
+                args: dict | None = None) -> None:
+        ev = self._base(name, ts_s)
+        ev.update(ph="i", s="t")
+        if args:
+            ev["args"] = {k: str(v) for k, v in args.items()}
+        with self._lock:
+            self._events.append(ev)
+
+    def flush(self) -> None:
+        with self._lock:
+            events = list(self._events)
+        doc = {"traceEvents": events, "displayTimeUnit": "ms",
+               "otherData": {"schema_version": SCHEMA_VERSION,
+                             "producer": "repro.telemetry"}}
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = f"{self.path}.tmp.{self._pid}"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, self.path)  # atomic: a reader never sees half a file
