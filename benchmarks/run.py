@@ -181,6 +181,29 @@ def main(argv=None) -> None:
         )
     all_results["topk_kernel_timing"] = kt
 
+    # ---- aggregation roofline: fused center kernels vs XLA dense ----------
+    # same budget scaling as the top-k ladder; every row asserts parity
+    # before it times, so bench-smoke exercises the kernels' semantics
+    agg_ms = (4, 8) if args.dryrun else table1_communication.AGG_ROOFLINE_MS
+    agg_ds = ((1408, 4096) if args.dryrun
+              else table1_communication.KERNEL_TIMING_DS if args.full
+              else (1408, 16_384, 131_072))
+    with tel.span("bench.agg_roofline"):
+        ar = table1_communication.run_agg_roofline(ms=agg_ms, ds=agg_ds)
+    for row in ar:
+        extra = (f"xla_us={row['xla_dense_us']:.1f}"
+                 if "xla_dense_us" in row else "baseline=skipped")
+        bytes_str = (f" center_bytes={row['center_bytes_sparse']}"
+                     f"/{row['center_bytes_dense']}"
+                     if "center_bytes_sparse" in row else "")
+        _emit(
+            f"agg_roofline/{row['rule']}/m={row['m']}/d={row['d']}",
+            row["kernel_us"],
+            f"plan={row['plan']} {extra}{bytes_str} "
+            f"interpret={row['interpret_mode']}",
+        )
+    all_results["agg_roofline"] = ar
+
     # ---- Saddle escape (beyond-paper; Theorems 1-2 exercised directly) ----
     t0 = time.time()
     with tel.span("bench.saddle_escape"):

@@ -221,6 +221,142 @@ def run_kernel_timing(ds=KERNEL_TIMING_DS, ratio=0.1, repeats=3, seed=0):
     return rows
 
 
+AGG_ROOFLINE_MS = (8, 32, 128)
+
+# registry krum materializes an (m, m, d) diff tensor — past this float32
+# budget (~1 GB) the dense baseline is infeasible and its row is skipped
+# loudly rather than silently downsized
+KRUM_BASELINE_MAX_ELEMS = 2**28
+
+
+def run_agg_roofline(ms=AGG_ROOFLINE_MS, ds=KERNEL_TIMING_DS, ratio=0.1,
+                     repeats=3, seed=0, max_k=8192):
+    """Aggregation roofline on the same 1.4k → 1M d ladder as
+    :func:`run_kernel_timing`, swept over cluster sizes m: the fused
+    robust-aggregation kernels vs their XLA dense baselines, parity
+    asserted on every shape.
+
+    Three rows per (m, d):
+
+    * ``sparse_mean`` — :func:`repro.kernels.aggregate_sparse` summing m
+      top-k payloads straight from the wire (O(m·k) center memory) vs
+      the dense path (per-worker scatter to (m, d), then sum).  Payloads
+      are integer-valued with distinct per-worker indices (the top-k
+      wire format), so parity is exact equality.
+    * ``trimmed_mean`` — the tiled bitonic-sort kernel vs the registry's
+      ``jnp.sort``-based rule (bit-equal by construction).
+    * ``krum`` — the blocked pairwise-distance kernel vs the registry
+      ``krum_select``; the baseline's (m, m, d) diff tensor caps its
+      feasible shapes (:data:`KRUM_BASELINE_MAX_ELEMS`) — infeasible
+      rows keep the kernel timing and carry ``baseline_skipped=True``.
+
+    Off-TPU every kernel runs in interpret mode (flagged per row): the
+    numbers answer "does it run, bit-exactly, at this scale".
+    """
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.core import aggregation as _agg
+    from repro.kernels import (
+        agg_kernel_plan,
+        aggregate_sparse,
+        krum_select_fused,
+        trimmed_mean_fused,
+    )
+    from repro.telemetry import get_telemetry
+
+    tel = get_telemetry()
+    interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    def _time(f, *args):
+        jax.block_until_ready(f(*args))          # warm (compile above)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(f(*args))
+        return (time.perf_counter() - t0) / repeats * 1e6
+
+    for m in ms:
+        for d in ds:
+            k = max(1, min(int(round(ratio * d)), max_k, d))
+            with tel.span("bench.agg_roofline.md", m=m, d=d, k=k):
+                # -- sparse-domain aggregation ------------------------
+                vals = jnp.asarray(
+                    rng.integers(-8, 9, size=(m, k)), jnp.float32)
+                # distinct per-worker indices via strided sampling (the
+                # top-k wire guarantee), index-ascending like the wire
+                stride = d // k
+                idx = jnp.asarray(
+                    np.arange(k)[None, :] * stride
+                    + rng.integers(0, stride, size=(m, k)),
+                    jnp.int32)
+                sparse_fn = jax.jit(lambda v, i: aggregate_sparse(v, i, d))
+                dense_fn = jax.jit(lambda v, i: jax.vmap(
+                    lambda vi, ii: jnp.zeros((d,), vi.dtype).at[ii].set(vi)
+                )(v, i).sum(0))
+                got = sparse_fn(vals, idx)
+                want = dense_fn(vals, idx)
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want))
+                plan, _ = agg_kernel_plan(m, d, k=k)
+                rows.append({
+                    "rule": "sparse_mean", "m": m, "d": d, "k": k,
+                    "plan": plan,
+                    "kernel_us": _time(sparse_fn, vals, idx),
+                    "xla_dense_us": _time(dense_fn, vals, idx),
+                    "center_bytes_sparse": m * k * 8 + 4 * d,
+                    "center_bytes_dense": m * d * 4 + 4 * d,
+                    "backend": jax.default_backend(),
+                    "interpret_mode": interpret,
+                })
+
+                # -- fused dense rules: integer-valued (m, d) stack ---
+                x = jnp.asarray(
+                    rng.integers(-5, 6, size=(m, d)), jnp.float32)
+                tm_kern = lambda z: trimmed_mean_fused(z, 0.2)
+                tm_xla = jax.jit(lambda z: _agg.trimmed_mean(z, 0.2))
+                np.testing.assert_array_equal(
+                    np.asarray(tm_kern(x)), np.asarray(tm_xla(x)))
+                rows.append({
+                    "rule": "trimmed_mean", "m": m, "d": d,
+                    "plan": agg_kernel_plan(m, d)[0],
+                    "kernel_us": _time(tm_kern, x),
+                    "xla_dense_us": _time(tm_xla, x),
+                    "backend": jax.default_backend(),
+                    "interpret_mode": interpret,
+                })
+
+                n_byz = max(1, m // 8)
+                kr_kern = lambda z: krum_select_fused(z, n_byz)
+                baseline_ok = m * m * d <= KRUM_BASELINE_MAX_ELEMS
+                row = {
+                    "rule": "krum", "m": m, "d": d, "n_byz": n_byz,
+                    "plan": agg_kernel_plan(m, d)[0],
+                    "kernel_us": _time(kr_kern, x),
+                    "baseline_skipped": not baseline_ok,
+                    "backend": jax.default_backend(),
+                    "interpret_mode": interpret,
+                }
+                if baseline_ok:
+                    kr_xla = jax.jit(
+                        lambda z: _agg.krum_select(z, n_byz))
+                    assert int(kr_kern(x)) == int(kr_xla(x))
+                    row["xla_dense_us"] = _time(kr_xla, x)
+                else:
+                    print(f"agg_roofline: krum dense baseline skipped at "
+                          f"m={m} d={d} (m²·d = {m * m * d} > "
+                          f"{KRUM_BASELINE_MAX_ELEMS})")
+                rows.append(row)
+            if tel.enabled:
+                for r in rows[-3:]:
+                    tel.event("bench.agg_roofline.row", **{
+                        kk: vv for kk, vv in r.items()
+                        if isinstance(vv, (int, float, str, bool))})
+    return rows
+
+
 def run_bits_to_eps(dataset="a9a", compressors=COMPRESSOR_SWEEP,
                     eps_grid=(0.3, 0.1, 0.05, 0.02), newton_budget=60,
                     seed=0, downlink=None):

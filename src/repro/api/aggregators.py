@@ -11,6 +11,13 @@ aggregation rule (Algorithm 1, step 6, and its baselines):
                             default), trim_frac per side
     "coordinate_median"     coordinate-wise median
 
+and the fused-kernel variants (``repro.kernels.robust_agg``, identical
+math on the paper runtime's flat stack, registry path on the mesh):
+
+    "krum_kernel:2"             blocked pairwise distances + on-chip scores
+    "trimmed_mean_kernel:0.1"   tiled per-coordinate bitonic sort
+    "coordinate_median_kernel"  same sort, median epilogue
+
 ``make_aggregator(spec)`` resolves the string ONCE (never inside a
 trace); the returned object serves BOTH runtimes:
 
@@ -26,6 +33,15 @@ returns None when the rule provably tolerates a Byzantine fraction α at
 cluster size m, else the reason it does not —
 :meth:`ExperimentSpec.validate` turns that into a build-time
 :class:`SpecError`.
+
+Rules whose math is a weighted scatter-sum of the worker payloads —
+mean and norm_trim — additionally expose the **sparse-domain path**
+(``supports_sparse`` / ``agg.sparse(vals, idx, d)``): they aggregate
+top-k wire payloads directly via :func:`repro.kernels.aggregate_sparse`
+without ever materializing the m dense (d,) vectors.  The paper runtime
+auto-routes through it when every uplink is payload-shaped (top-k
+family, no error feedback, no update attack) — see
+``repro.core.newton``.
 """
 from __future__ import annotations
 
@@ -33,10 +49,19 @@ import jax
 import jax.numpy as jnp
 
 from ..core import aggregation as _agg
+from ..kernels import (
+    agg_kernel_plan,
+    aggregate_sparse,
+    coordinate_median_fused,
+    krum_select_fused,
+    trimmed_mean_fused,
+)
 from .errors import SpecError
 
 AGGREGATOR_SPECS = ("mean", "norm_trim:<beta>", "krum:<n_byz>",
-                    "trimmed_mean:<frac>", "coordinate_median")
+                    "trimmed_mean:<frac>", "coordinate_median",
+                    "krum_kernel:<n_byz>", "trimmed_mean_kernel:<frac>",
+                    "coordinate_median_kernel")
 
 
 class Aggregator:
@@ -58,6 +83,18 @@ class Aggregator:
         cluster size ``m``; otherwise the reason + fix (a build error)."""
         return None
 
+    #: True when :meth:`sparse` aggregates wire payloads directly
+    supports_sparse = False
+
+    def sparse(self, vals, idx, d: int):
+        """(m, k) payload values + (m, k) int32 indices (index-ascending,
+        distinct within each worker — the top-k wire format) → the same
+        (aggregate (d,), keep mask (m,)) as ``__call__`` on the densified
+        stack, computed without materializing any (m, d) array."""
+        raise NotImplementedError(
+            f"{self.name!r} has no sparse-domain path — densify first"
+        )
+
     @staticmethod
     def _m(updates_tree) -> int:
         return jax.tree_util.tree_leaves(updates_tree)[0].shape[0]
@@ -78,6 +115,13 @@ class Mean(Aggregator):
 
     def __call__(self, updates):
         return updates.mean(0), self._ones(updates.shape[0], updates.dtype)
+
+    supports_sparse = True
+
+    def sparse(self, vals, idx, d):
+        m = vals.shape[0]
+        agg = aggregate_sparse(vals, idx, d) / m
+        return agg, self._ones(m, agg.dtype)
 
     def tree(self, updates_tree):
         m = self._m(updates_tree)
@@ -104,6 +148,23 @@ class NormTrim(Aggregator):
     def __call__(self, updates):
         return _agg.norm_trim(updates, self.beta)
 
+    supports_sparse = True
+
+    def sparse(self, vals, idx, d):
+        # with distinct indices per worker (the top-k wire format) the
+        # payload norm IS the dense-update norm, summed in the same
+        # coordinate order — the keep mask matches _agg.norm_trim
+        # bit-for-bit; the kept payloads then scatter-sum directly
+        m = vals.shape[0]
+        v32 = vals.astype(jnp.float32)
+        norms = jnp.linalg.norm(v32, axis=1)
+        n_keep = max(1, int(round((1.0 - self.beta) * m)))
+        order = jnp.argsort(norms)
+        ranks = jnp.argsort(order)
+        keep = (ranks < n_keep).astype(jnp.float32)
+        agg = aggregate_sparse(v32, idx, d, weights=keep) / n_keep
+        return agg, keep.astype(vals.dtype)
+
     def tree(self, updates_tree):
         return _agg.norm_trim_tree(updates_tree, self.beta)
 
@@ -117,20 +178,29 @@ class NormTrim(Aggregator):
 
 
 class Krum(Aggregator):
-    """Krum [BMGS17]: forward the single most-central update."""
+    """Krum [BMGS17]: forward the single most-central update.
 
-    def __init__(self, n_byz: int):
+    ``use_kernel=True`` (spec head ``krum_kernel``) routes the flat-stack
+    selection through :func:`repro.kernels.krum_select_fused` whenever
+    :func:`repro.kernels.agg_kernel_plan` serves m, falling back to the
+    registry past its on-chip (P, P) budget; the mesh ``tree`` path
+    always uses the registry."""
+
+    def __init__(self, n_byz: int, use_kernel: bool = False):
         if n_byz < 0:
             raise SpecError(f"krum needs n_byz ≥ 0, got {n_byz}")
         self.n_byz = int(n_byz)
-        self.spec = f"krum:{self.n_byz}"
-        self.name = "krum"
+        self.use_kernel = bool(use_kernel)
+        self.name = "krum_kernel" if use_kernel else "krum"
+        self.spec = f"{self.name}:{self.n_byz}"
 
     def __call__(self, updates):
         m = updates.shape[0]
-        j = _agg.krum_select(
-            updates.reshape(m, -1).astype(jnp.float32), self.n_byz
-        )
+        flat = updates.reshape(m, -1).astype(jnp.float32)
+        if self.use_kernel and agg_kernel_plan(m, flat.shape[1])[0] == "fused":
+            j = krum_select_fused(flat, self.n_byz)
+        else:
+            j = _agg.krum_select(flat, self.n_byz)
         keep = (jnp.arange(m) == j).astype(updates.dtype)
         return updates[j], keep
 
@@ -152,21 +222,34 @@ class Krum(Aggregator):
 
 
 class TrimmedMean(Aggregator):
-    """Coordinate-wise trimmed mean (ByzantinePGD's default)."""
+    """Coordinate-wise trimmed mean (ByzantinePGD's default).
 
-    def __init__(self, trim_frac: float):
+    ``use_kernel=True`` (spec head ``trimmed_mean_kernel``) runs the
+    per-coordinate sort as the tiled bitonic kernel
+    (:func:`repro.kernels.trimmed_mean_fused`, bit-identical epilogue)
+    whenever ``agg_kernel_plan`` serves m; mesh ``tree`` path stays on
+    the registry."""
+
+    def __init__(self, trim_frac: float, use_kernel: bool = False):
         if not 0.0 < trim_frac < 0.5:
             raise SpecError(
                 f"trimmed_mean needs a per-side trim fraction in (0, 0.5), "
                 f"got {trim_frac!r}; use e.g. 'trimmed_mean:0.1'"
             )
         self.trim_frac = float(trim_frac)
-        self.spec = f"trimmed_mean:{self.trim_frac!r}"
-        self.name = "trimmed_mean"
+        self.use_kernel = bool(use_kernel)
+        self.name = "trimmed_mean_kernel" if use_kernel else "trimmed_mean"
+        self.spec = f"{self.name}:{self.trim_frac!r}"
 
     def __call__(self, updates):
-        agg = _agg.trimmed_mean(updates, self.trim_frac)
-        return agg, self._ones(updates.shape[0], updates.dtype)
+        m = updates.shape[0]
+        if (self.use_kernel and updates.ndim == 2
+                and agg_kernel_plan(m, updates.shape[1])[0] == "fused"):
+            agg = trimmed_mean_fused(updates, self.trim_frac).astype(
+                updates.dtype)
+        else:
+            agg = _agg.trimmed_mean(updates, self.trim_frac)
+        return agg, self._ones(m, updates.dtype)
 
     def tree(self, updates_tree):
         m = self._m(updates_tree)
@@ -185,14 +268,27 @@ class TrimmedMean(Aggregator):
 
 
 class CoordinateMedian(Aggregator):
-    """Coordinate-wise median; resilient up to α < 1/2."""
+    """Coordinate-wise median; resilient up to α < 1/2.
 
-    def __init__(self):
-        self.spec = self.name = "coordinate_median"
+    ``use_kernel=True`` (spec ``coordinate_median_kernel``) routes the
+    flat stack through :func:`repro.kernels.coordinate_median_fused`
+    (bit-identical to ``jnp.median``) whenever ``agg_kernel_plan``
+    serves m; mesh ``tree`` path stays on the registry."""
+
+    def __init__(self, use_kernel: bool = False):
+        self.use_kernel = bool(use_kernel)
+        self.spec = self.name = (
+            "coordinate_median_kernel" if use_kernel else "coordinate_median"
+        )
 
     def __call__(self, updates):
-        agg = _agg.coordinate_median(updates)
-        return agg, self._ones(updates.shape[0], updates.dtype)
+        m = updates.shape[0]
+        if (self.use_kernel and updates.ndim == 2
+                and agg_kernel_plan(m, updates.shape[1])[0] == "fused"):
+            agg = coordinate_median_fused(updates).astype(updates.dtype)
+        else:
+            agg = _agg.coordinate_median(updates)
+        return agg, self._ones(m, updates.dtype)
 
     def tree(self, updates_tree):
         m = self._m(updates_tree)
@@ -231,6 +327,14 @@ def make_aggregator(spec) -> Aggregator:
         return TrimmedMean(_num(head, arg or "0.2", float, "a trim fraction"))
     if head == "coordinate_median":
         return CoordinateMedian()
+    if head == "krum_kernel":
+        return Krum(_num(head, arg or "2", int, "an integer n_byz"),
+                    use_kernel=True)
+    if head == "trimmed_mean_kernel":
+        return TrimmedMean(_num(head, arg or "0.2", float, "a trim fraction"),
+                           use_kernel=True)
+    if head == "coordinate_median_kernel":
+        return CoordinateMedian(use_kernel=True)
     raise SpecError(
         f"unknown aggregator spec {spec!r}; expected one of {AGGREGATOR_SPECS}"
     )

@@ -156,6 +156,58 @@ class VectorChannel(Channel):
             return x, state, delta
         return x, state
 
+    # -- sparse receive path --------------------------------------------
+    @property
+    def supports_sparse_receive(self) -> bool:
+        """True when :meth:`transmit_sparse` carries this channel's full
+        semantics: an uplink whose compressor ships (value, index)
+        payloads, with no error-feedback state to densify against and no
+        update attack to apply to reconstructed vectors."""
+        from ..compression.sparsify import _SparseCompressor
+
+        return (self.is_uplink
+                and isinstance(self.compressor, _SparseCompressor)
+                and self.feedback is None
+                and self.attack_hook is None)
+
+    def transmit_sparse(self, x, state, *, key=None, measure: bool = False):
+        """Payload-shaped receive: compress every sender's vector but hand
+        the receiver the wire payloads themselves — values ``(m, k)`` and
+        int32 indices ``(m, k)`` — instead of reconstructing m dense
+        ``(d,)`` vectors.  Returns ``((vals, idx), state')`` (or with δ̂
+        appended under ``measure=True``, computed from the payload norms:
+        for the distinct-index wire format ‖C(x)‖² = Σ vals², so
+        δ̂ = 1 − (‖x‖² − Σ vals²)/‖x‖² without densifying).
+
+        Exactly what crosses the wire is unchanged — same payload, same
+        ``bits_per_round`` — only the receiver-side representation
+        differs, so :class:`WireLedger` accounting is identical to
+        :meth:`transmit`.  Only valid when
+        :attr:`supports_sparse_receive` (asserted)."""
+        assert self.supports_sparse_receive, (
+            "transmit_sparse needs an uplink sparse compressor with no "
+            "error feedback and no attack hook — use transmit"
+        )
+        comp = self.compressor
+        if self.n_senders > 1:
+            keys = (jax.random.split(key, self.n_senders)
+                    if key is not None else None)
+            vals, idx = jax.vmap(lambda xi, ki: comp.compress(xi, key=ki))(
+                x, keys
+            )
+        else:
+            vals, idx = comp.compress(x, key=key)
+            vals, idx = vals[None], idx[None]
+        idx = idx.astype(jnp.int32)
+        if measure:
+            x32 = x.astype(jnp.float32)
+            den = jnp.sum(x32 * x32)
+            num = den - jnp.sum(vals.astype(jnp.float32) ** 2)
+            delta = jnp.where(den > 0, 1.0 - num / jnp.maximum(den, 1e-30),
+                              1.0)
+            return (vals, idx), state, delta
+        return (vals, idx), state
+
     # -- accounting -----------------------------------------------------
     def bits_per_round(self) -> int:
         """Exact bits one round costs on this channel (static Python int):

@@ -64,9 +64,18 @@ class NewtonConfig:
     ef_damping: float = 0.75      # θ; mid-plateau on w8a (see error_feedback.py)
     # center aggregation rule as a repro.api.aggregators spec string
     # ("norm_trim:0.25", "krum:2", "trimmed_mean:0.1", "coordinate_median",
-    # "mean"); None keeps the legacy β-field behaviour (norm_trim(β) when
-    # β > 0, plain mean otherwise)
+    # "mean", or a fused-kernel variant like "krum_kernel:2"); None keeps
+    # the legacy β-field behaviour (norm_trim(β) when β > 0, plain mean
+    # otherwise)
     aggregator: Optional[str] = None
+    # sparse-domain center: aggregate top-k wire payloads directly
+    # (O(m·k) center memory, never densifying the m worker vectors).
+    # None ⇒ auto — on whenever the uplink channel supports the sparse
+    # receive (sparse compressor, no error feedback, no update attack)
+    # AND the aggregator has a sparse path (mean / norm_trim).  True
+    # demands it (build error when unsupported); False forces the dense
+    # center.
+    sparse_center: Optional[bool] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +127,7 @@ class DistributedCubicNewton:
         self.ledger = WireLedger()
         # channels need (d, m); built once at the first step
         self._dims: Optional[tuple] = None
+        self._use_sparse_center = False
         self.uplink: Optional[VectorChannel] = None
         self.downlink: Optional[VectorChannel] = None
         self.grad_uplink: Optional[VectorChannel] = None
@@ -157,6 +167,21 @@ class DistributedCubicNewton:
             "uplink", cfg.grad_compressor, d, m,
             error_feedback=cfg.error_feedback, damping=cfg.ef_damping,
         ) if cfg.exact_gradient else None
+        # sparse-domain center: resolved once the channels exist
+        can_sparse = (self.uplink.supports_sparse_receive
+                      and self.aggregator.supports_sparse)
+        if cfg.sparse_center and not can_sparse:
+            raise ValueError(
+                "sparse_center=True needs a sparse uplink compressor "
+                "(top-k family) with error_feedback='none', no update "
+                "attack, and a mean/norm_trim aggregator — got "
+                f"compressor={cfg.compressor!r}, "
+                f"error_feedback={cfg.error_feedback!r}, "
+                f"attack={self.attack.name!r}, "
+                f"aggregator={self.aggregator.spec!r}"
+            )
+        self._use_sparse_center = (can_sparse if cfg.sparse_center is None
+                                   else bool(cfg.sparse_center))
         if self._dims is not None:
             self._rebuild_jit()   # stale trace would bake the old channels in
         self._dims = (d, m)
@@ -225,14 +250,30 @@ class DistributedCubicNewton:
         # payloads, so compression grants them no protection.  ``measure``
         # surfaces the achieved contraction δ̂ (one norm ratio, taken
         # BEFORE Byzantine injection) for the adaptive-k schedule.
-        s, new_state["uplink"], uplink_delta = self.uplink.transmit(
-            s, state["uplink"], key=k_comp, attack_key=k_update, measure=True
-        )
+        if self._use_sparse_center:
+            # sparse-domain center: the wire payloads (m, k) go straight
+            # to the aggregator's sparse path — the m dense (d,) vectors
+            # are never materialized at the center (O(m·k) not O(m·d)).
+            # Valid exactly when the channel has no EF state and no
+            # update attack (supports_sparse_receive, checked at build).
+            (pv, pidx), new_state["uplink"], uplink_delta = \
+                self.uplink.transmit_sparse(
+                    s, state["uplink"], key=k_comp, measure=True
+                )
+            agg, keep = self.aggregator.sparse(pv, pidx, w.shape[0])
+            # payload norms == reconstruction norms (distinct indices)
+            update_norms = jnp.linalg.norm(pv, axis=-1)
+        else:
+            s, new_state["uplink"], uplink_delta = self.uplink.transmit(
+                s, state["uplink"], key=k_comp, attack_key=k_update,
+                measure=True
+            )
 
-        # Center: the resolved aggregation rule (Algorithm 1, step 6 is
-        # norm_trim; krum / trimmed_mean / coordinate_median / mean come
-        # from the same registry).
-        agg, keep = self.aggregator(s)
+            # Center: the resolved aggregation rule (Algorithm 1, step 6
+            # is norm_trim; krum / trimmed_mean / coordinate_median /
+            # mean come from the same registry).
+            agg, keep = self.aggregator(s)
+            update_norms = jnp.linalg.norm(s, axis=-1)
         # optional momentum on the aggregated direction (CRm, [WZLL20] —
         # cited in §2; the paper itself uses v ≡ agg, i.e. momentum = 0)
         v_new = cfg.momentum * v + agg
@@ -246,7 +287,7 @@ class DistributedCubicNewton:
         )
         w_new = w + delta
         return w_new, v_new, new_state, {
-            "update_norms": jnp.linalg.norm(s, axis=-1), "keep": keep,
+            "update_norms": update_norms, "keep": keep,
             "uplink_delta": uplink_delta,
         }
 
@@ -276,6 +317,30 @@ class DistributedCubicNewton:
             up += self.grad_uplink.bits_per_round()
             down += 32 * self.uplink.d  # center broadcasts the averaged g
         return {"uplink": up, "downlink": down}
+
+    def center_bytes_per_round(self) -> int:
+        """Bytes the center's aggregation path touches per round (static
+        Python int, like :meth:`bits_per_step`): what the receiver
+        materializes between the wire and the (d,) aggregate.  Sparse
+        center: the m (value, index) payloads (4 B each entry) plus the
+        aggregate — O(m·k + d).  Dense center: m reconstructed f32
+        vectors plus the aggregate — O(m·d).  Re-read per round: an
+        adaptive uplink moves k between rounds."""
+        m, d = self.uplink.n_senders, self.uplink.d
+        if self._use_sparse_center:
+            k = min(self.uplink.compressor.k, d)
+            return m * k * 8 + 4 * d
+        return m * d * 4 + 4 * d
+
+    def _agg_kernel_label(self) -> str:
+        """Which center path this configuration runs — the round record's
+        ``agg_kernel`` field: ``"sparse"`` (payload-domain aggregation),
+        ``"fused"`` (a kernel-backed dense rule), or ``"dense"``."""
+        if self._use_sparse_center:
+            return "sparse"
+        if getattr(self.aggregator, "use_kernel", False):
+            return "fused"
+        return "dense"
 
     def _maybe_adapt(self, grad_norm: float,
                      measured_delta: Optional[float] = None) -> bool:
@@ -388,6 +453,7 @@ class DistributedCubicNewton:
             if escaped:
                 hist["saddle_escape_step"] = t
             if tel.enabled:
+                center_bytes = self.center_bytes_per_round()
                 tel.round(RoundRecord(
                     step=t, runtime="paper", loss=loss, grad_norm=gn,
                     model_decrease=(None if prev_loss is None
@@ -398,7 +464,13 @@ class DistributedCubicNewton:
                     attack=self.attack.name, alpha=self.attack.alpha,
                     wire_uplink_bits=bps["uplink"],
                     wire_downlink_bits=bps["downlink"],
+                    center_bytes=center_bytes,
+                    agg_kernel=self._agg_kernel_label(),
                 ), name="newton.round")
+                # the O(m·k)-vs-O(m·d) claim, measured per round
+                tel.gauge("newton.center_bytes", center_bytes, step=t,
+                          agg_kernel=self._agg_kernel_label(),
+                          aggregator=self.aggregator.name)
                 prev_loss = loss
             if hit_tol:
                 break

@@ -12,6 +12,20 @@ import jax.numpy as jnp
 from .cubic_step import cubic_solve_fused, cubic_step
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
+from .robust_agg import (
+    AGG_BLOCK,
+    DENSE_FUSED_MAX_M,
+    SPARSE_SCATTER_MAX_D,
+    agg_kernel_plan,
+    aggregate_sparse,
+    aggregate_sparse_gridded,
+    aggregate_sparse_scatter,
+    coordinate_median_fused,
+    krum_scores_fused,
+    krum_select_fused,
+    sort_workers_fused,
+    trimmed_mean_fused,
+)
 from .topk_compress import (
     DEFAULT_BLOCK,
     SINGLE_TILE_MAX_D,
@@ -51,17 +65,29 @@ def rmsnorm_nd(x, w, **kw):
 
 
 __all__ = [
+    "AGG_BLOCK",
     "DEFAULT_BLOCK",
+    "DENSE_FUSED_MAX_M",
     "SINGLE_TILE_MAX_D",
+    "SPARSE_SCATTER_MAX_D",
+    "agg_kernel_plan",
+    "aggregate_sparse",
+    "aggregate_sparse_gridded",
+    "aggregate_sparse_scatter",
     "attention_bshd",
+    "coordinate_median_fused",
     "cubic_solve_fused",
     "cubic_step",
     "flash_attention",
     "kernel_plan",
+    "krum_scores_fused",
+    "krum_select_fused",
     "rmsnorm",
     "rmsnorm_nd",
+    "sort_workers_fused",
     "topk_compress",
     "topk_compress_sharded",
     "topk_compress_tiled",
     "topk_decompress",
+    "trimmed_mean_fused",
 ]

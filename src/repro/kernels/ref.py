@@ -80,6 +80,46 @@ def topk_compress_sharded_ref(x, k, block=512):
     return jnp.asarray(vals, jnp.float32), jnp.asarray(idx, jnp.int32)
 
 
+def sparse_aggregate_ref(vals, idx, d, weights=None):
+    """Segmented-merge contract of :func:`repro.kernels.aggregate_sparse`,
+    spelled out sequentially: the m (k,) payloads ravel into one stream,
+    the stream is stably sorted by coordinate (lowest-index-first;
+    duplicate coordinates keep worker order), and every entry adds into
+    the (d,) f32 accumulator **in that order** — one unbuffered
+    ``np.add.at`` sweep.  Per-worker weights fold into the values before
+    the merge.  No (m, d) array exists at any point."""
+    import numpy as np
+
+    v = np.asarray(vals, np.float32)
+    if weights is not None:
+        v = v * np.asarray(weights, np.float32)[:, None]
+    vs = v.reshape(-1)
+    ix = np.asarray(idx).reshape(-1)
+    order = np.argsort(ix, kind="stable")
+    out = np.zeros((d,), np.float32)
+    np.add.at(out, ix[order], vs[order])
+    return jnp.asarray(out)
+
+
+def krum_scores_ref(flat, n_byz):
+    """Naive O(m²) double-loop krum scores — the [BMGS17] definition the
+    fused kernel and the registry ``krum_select`` must both minimize:
+    score(i) = Σ of the k = max(m − n_byz − 2, 1) smallest ‖xᵢ − xⱼ‖²
+    over j ≠ i, each distance summed coordinate-by-coordinate."""
+    import numpy as np
+
+    f = np.asarray(flat, np.float32)
+    m = f.shape[0]
+    k = max(m - int(n_byz) - 2, 1)
+    scores = []
+    for i in range(m):
+        d2 = sorted(
+            float(np.sum((f[i] - f[j]) ** 2)) for j in range(m) if j != i
+        )
+        scores.append(sum(d2[:k]))
+    return jnp.asarray(scores, jnp.float32)
+
+
 def rmsnorm_ref(x, w, eps=1e-6):
     """x: (N, d), w: (d,).  Gemma-style (1+w) scaling, fp32 accumulation."""
     x32 = x.astype(jnp.float32)

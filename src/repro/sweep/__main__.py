@@ -113,6 +113,10 @@ def main(argv=None) -> int:
                        help="summarize a telemetry events.jsonl stream "
                             "(span timings, cell outcomes, wire/compile "
                             "totals) — the live sweep progress view")
+    p_rep.add_argument("--plots", metavar="DIR", default=None,
+                       help="also render the Fig. 1-3 panels as PNGs into "
+                            "DIR (requires matplotlib; skipped with a "
+                            "hint when it is missing)")
 
     args = ap.parse_args(argv)
 
@@ -180,7 +184,14 @@ def main(argv=None) -> int:
             if args.telemetry is not None:
                 print()
             eps = tuple(float(e) for e in args.eps.split(","))
-            report_store(store_mod.ResultStore(args.store), eps_grid=eps)
+            st = store_mod.ResultStore(args.store)
+            report_store(st, eps_grid=eps)
+            if args.plots is not None:
+                from .report import plots as plot_store
+
+                plot_store(st, args.plots)
+        elif args.plots is not None:
+            raise SystemExit("--plots needs a store path")
         return 0
 
     return 2

@@ -193,6 +193,132 @@ def report(store, eps_grid=(0.3, 0.1, 0.05), printer=print) -> dict:
     return {"resilience": frontier, "eps": eps_rows, "wire": wire_rows}
 
 
+# ----------------------------------------------------------------- plots
+def plots(store, out_dir: str, printer=print) -> Optional[list]:
+    """Render the paper's figure panels from a result store (Figs. 1-3).
+
+    Writes up to three PNGs under ``out_dir`` and returns their paths:
+
+    * ``fig12_resilience.png`` — loss/accuracy trajectories under attack,
+      one panel per attack head, one line per aggregator (Figs. 1-2);
+    * ``fig3_convergence.png`` — the non-Byzantine convergence curves,
+      one panel per problem, one line per (compressor, aggregator);
+    * ``fig_bits_to_eps.png`` — ‖∇f‖ against exact cumulative wire bits
+      per compressor (the Table-1 communication-efficiency axis).
+
+    Gated on matplotlib: returns ``None`` (and prints a hint) when the
+    dependency is missing, so the text report never regresses on a
+    matplotlib-free host.  Panels whose series are absent from the store
+    (e.g. no ``grad_norm`` history) are skipped, not fatal.
+    """
+    try:
+        import matplotlib
+    except ImportError:
+        printer("[sweep] --plots skipped: matplotlib is not installed")
+        return None
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    recs = store.ok_records()
+    written = []
+
+    def _series(rec):
+        m = rec.get("metrics", {})
+        ev, loss = m.get("eval") or [], m.get("loss") or []
+        return (ev, "accuracy") if ev else (loss, "loss")
+
+    def _save(fig, fname):
+        path = os.path.join(out_dir, fname)
+        fig.tight_layout()
+        fig.savefig(path, dpi=120)
+        plt.close(fig)
+        written.append(path)
+
+    # Figs. 1-2: one panel per attack, lines per aggregator head.
+    attacked = [r for r in recs
+                if str(_spec(r).get("attack", "none")) not in ("none", "None")
+                and _series(r)[0]]
+    if attacked:
+        heads = []
+        for r in attacked:
+            h = str(_spec(r).get("attack")).partition(":")[0]
+            if h not in heads:
+                heads.append(h)
+        fig, axes = plt.subplots(1, len(heads),
+                                 figsize=(4.2 * len(heads), 3.4),
+                                 squeeze=False)
+        for ax, attack in zip(axes[0], heads):
+            ylabel = "loss"
+            for r in attacked:
+                if str(_spec(r).get("attack")).partition(":")[0] != attack:
+                    continue
+                ys, ylabel = _series(r)
+                label = (f"{_agg_head(r)} (α={_spec(r).get('alpha')})"
+                         if _spec(r).get("alpha") is not None
+                         else _agg_head(r))
+                ax.plot(range(1, len(ys) + 1), ys, label=label)
+            ax.set_title(f"attack: {attack}")
+            ax.set_xlabel("round")
+            ax.set_ylabel(ylabel)
+            ax.legend(fontsize=7)
+        fig.suptitle("Byzantine resilience (Figs. 1-2)")
+        _save(fig, "fig12_resilience.png")
+
+    # Fig. 3: non-Byzantine convergence, one panel per problem.
+    clean = [r for r in recs
+             if str(_spec(r).get("attack", "none")) in ("none", "None")
+             and _series(r)[0]]
+    if clean:
+        problems = []
+        for r in clean:
+            p = str(_spec(r).get("problem", "?"))
+            if p not in problems:
+                problems.append(p)
+        fig, axes = plt.subplots(1, len(problems),
+                                 figsize=(4.2 * len(problems), 3.4),
+                                 squeeze=False)
+        for ax, problem in zip(axes[0], problems):
+            ylabel = "loss"
+            for r in clean:
+                if str(_spec(r).get("problem", "?")) != problem:
+                    continue
+                ys, ylabel = _series(r)
+                ax.plot(range(1, len(ys) + 1), ys,
+                        label=f"{_comp_label(r)}/{_agg_head(r)}")
+            ax.set_title(problem)
+            ax.set_xlabel("round")
+            ax.set_ylabel(ylabel)
+            ax.legend(fontsize=7)
+        fig.suptitle("Convergence without attack (Fig. 3)")
+        _save(fig, "fig3_convergence.png")
+
+    # Bits-to-ε: ‖∇f‖ vs exact cumulative wire bits, per compressor.
+    wired = [r for r in recs
+             if (r.get("metrics", {}).get("grad_norm") or [])
+             and (r.get("metrics", {}).get("bits_cumulative") or [])]
+    if wired:
+        fig, ax = plt.subplots(figsize=(5.2, 3.8))
+        for r in wired:
+            m = r.get("metrics", {})
+            gn, bits = m["grad_norm"], m["bits_cumulative"]
+            n = min(len(gn), len(bits))
+            ax.plot(bits[:n], gn[:n],
+                    label=f"{_comp_label(r)}/{_agg_head(r)}")
+        ax.set_xscale("log")
+        ax.set_yscale("log")
+        ax.set_xlabel("cumulative wire bits (exact, ledger)")
+        ax.set_ylabel("‖∇f‖")
+        ax.set_title("bits-to-ε (Table 1 axis)")
+        ax.legend(fontsize=7)
+        _save(fig, "fig_bits_to_eps.png")
+
+    printer(f"[sweep] wrote {len(written)} plot(s) → {out_dir}")
+    return written
+
+
 # ------------------------------------------------------- telemetry view
 def telemetry_report(path: str, printer=print) -> dict:
     """Progress view over a telemetry ``events.jsonl`` stream: span

@@ -33,6 +33,10 @@ class RoundRecord:
     alpha: float = 0.0
     wire_uplink_bits: Optional[int] = None     # exact bits this round
     wire_downlink_bits: Optional[int] = None
+    center_bytes: Optional[int] = None         # center aggregation-path
+                                               # bytes (O(m·k) sparse,
+                                               # O(m·d) dense)
+    agg_kernel: Optional[str] = None           # "sparse"|"fused"|"dense"
 
     def to_fields(self) -> dict:
         """Flatten to JSONL event fields (``None`` dropped, floats
@@ -53,6 +57,10 @@ class RoundRecord:
             out["wire_uplink_bits"] = int(self.wire_uplink_bits)
         if self.wire_downlink_bits is not None:
             out["wire_downlink_bits"] = int(self.wire_downlink_bits)
+        if self.center_bytes is not None:
+            out["center_bytes"] = int(self.center_bytes)
+        if self.agg_kernel is not None:
+            out["agg_kernel"] = str(self.agg_kernel)
         return out
 
 

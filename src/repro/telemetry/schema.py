@@ -7,7 +7,8 @@ timestamps; no line references another line by position).
 
 Base keys (every event):
 
-* ``v``    — schema version (int, == :data:`SCHEMA_VERSION`)
+* ``v``    — schema version (int, one of :data:`ACCEPTED_VERSIONS`;
+  writers stamp :data:`SCHEMA_VERSION`)
 * ``kind`` — one of :data:`KINDS`
 * ``name`` — dotted event name (``"sweep.cell"``, ``"newton.round"``)
 * ``ts``   — seconds since the process enabled telemetry (monotonic)
@@ -21,6 +22,8 @@ Per-kind required keys (on top of the base):
 * ``hist``    — ``value`` (number), one observation
 * ``round``   — ``step`` (int ≥ 0); the flattened
   :class:`~repro.telemetry.RoundRecord` fields ride as optional keys
+  (v2 adds ``center_bytes``, int ≥ 0, the center aggregation-path bytes,
+  and ``agg_kernel``, one of ``"sparse"``/``"fused"``/``"dense"``)
 * ``wire``    — ``ledger_id`` (int), ``uplink`` (int ≥ 0),
   ``downlink`` (int ≥ 0), ``rounds`` (int ≥ 0): ONE ledger-record call,
   exact integer bits
@@ -42,7 +45,12 @@ from __future__ import annotations
 
 from numbers import Number
 
-SCHEMA_VERSION = 1
+#: version writers stamp on new events (2: RoundRecord grew
+#: ``center_bytes``/``agg_kernel``)
+SCHEMA_VERSION = 2
+#: versions the validator accepts — v1 streams carry a strict subset of
+#: the v2 round fields, so they stay valid forever
+ACCEPTED_VERSIONS = (1, 2)
 
 KINDS = ("event", "span", "counter", "gauge", "hist", "round", "wire",
          "ledger", "compile")
@@ -54,7 +62,7 @@ EVENT_SCHEMA = {
     "type": "object",
     "required": ["v", "kind", "name", "ts", "wall"],
     "properties": {
-        "v": {"const": SCHEMA_VERSION},
+        "v": {"enum": list(ACCEPTED_VERSIONS)},
         "kind": {"enum": list(KINDS)},
         "name": {"type": "string", "minLength": 1},
         "ts": {"type": "number", "minimum": 0},
@@ -71,6 +79,8 @@ EVENT_SCHEMA = {
         "total_bits": {"type": "integer", "minimum": 0},
         "event": {"type": "string"},
         "args": {"type": "object"},
+        "center_bytes": {"type": "integer", "minimum": 0},
+        "agg_kernel": {"enum": ["sparse", "fused", "dense"]},
     },
     "allOf": [
         {"if": {"properties": {"kind": {"const": "span"}}},
@@ -103,7 +113,10 @@ _REQUIRED_BY_KIND = {
 }
 
 _NONNEG_INTS = ("step", "ledger_id", "uplink", "downlink", "rounds",
-                "uplink_bits", "downlink_bits", "total_bits")
+                "uplink_bits", "downlink_bits", "total_bits",
+                "center_bytes")
+
+_AGG_KERNELS = ("sparse", "fused", "dense")
 
 
 def validate_event(obj) -> list:
@@ -111,8 +124,9 @@ def validate_event(obj) -> list:
     errors = []
     if not isinstance(obj, dict):
         return [f"event must be an object, got {type(obj).__name__}"]
-    if obj.get("v") != SCHEMA_VERSION:
-        errors.append(f"v must be {SCHEMA_VERSION}, got {obj.get('v')!r}")
+    if obj.get("v") not in ACCEPTED_VERSIONS:
+        errors.append(f"v must be one of {ACCEPTED_VERSIONS}, "
+                      f"got {obj.get('v')!r}")
     kind = obj.get("kind")
     if kind not in KINDS:
         errors.append(f"kind must be one of {KINDS}, got {kind!r}")
@@ -141,6 +155,9 @@ def validate_event(obj) -> list:
                           f"got {obj[key]!r}")
     if "args" in obj and not isinstance(obj["args"], dict):
         errors.append(f"args must be an object, got {type(obj['args'])}")
+    if "agg_kernel" in obj and obj["agg_kernel"] not in _AGG_KERNELS:
+        errors.append(f"agg_kernel must be one of {_AGG_KERNELS}, "
+                      f"got {obj['agg_kernel']!r}")
     return errors
 
 

@@ -341,3 +341,176 @@ def test_tree_channel_stateless_matches_stateful_none(rng):
     p2, m2, state2 = jax.jit(step)(params0, batch, key, state)
     for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
         np.testing.assert_array_equal(a, b)
+
+
+# ------------------------- sparse receive path ----------------------------
+
+
+def test_transmit_sparse_payload_matches_transmit(rng):
+    """The payload-shaped receive is the same wire: densifying the
+    (vals, idx) payloads reproduces transmit's reconstruction exactly,
+    δ̂ agrees, and bits_per_round is untouched."""
+    d, m = 600, 5
+    ch = VectorChannel("uplink", "topk:0.1", d, m, error_feedback="none")
+    assert ch.supports_sparse_receive
+    x = jax.random.normal(rng, (m, d))
+    state = ch.init_state()
+    (vals, idx), _, delta_s = ch.transmit_sparse(x, state, measure=True)
+    xhat, _, delta_d = ch.transmit(x, state, measure=True)
+    assert idx.dtype == jnp.int32
+    dense = jnp.zeros((m, d)).at[jnp.arange(m)[:, None], idx].set(vals)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(xhat))
+    np.testing.assert_allclose(float(delta_s), float(delta_d), atol=1e-6)
+    # wire accounting identical: the payload is what crosses, either way
+    assert ch.bits_per_round() == \
+        VectorChannel("uplink", "topk:0.1", d, m,
+                      error_feedback="none").bits_per_round()
+
+
+def test_transmit_sparse_single_sender(rng):
+    """n_senders == 1 still hands back worker-stacked (1, k) payloads."""
+    ch = VectorChannel("uplink", "topk:0.25", 40, 1, error_feedback="none")
+    (vals, idx), _ = ch.transmit_sparse(jax.random.normal(rng, (40,)),
+                                        ch.init_state())
+    assert vals.shape == (1, 10) and idx.shape == (1, 10)
+
+
+def test_supports_sparse_receive_gate():
+    """The gate demands: uplink direction, a sparse (value, index)
+    compressor, no EF state to densify against, no update attack."""
+    ok = VectorChannel("uplink", "topk:0.1", 100, 4, error_feedback="none")
+    assert ok.supports_sparse_receive
+    down = VectorChannel("downlink", "topk:0.1", 100, 1,
+                         error_feedback="none")
+    assert not down.supports_sparse_receive
+    ef = VectorChannel("uplink", "topk:0.1", 100, 4, error_feedback="ef21")
+    assert not ef.supports_sparse_receive
+    dense_comp = VectorChannel("uplink", "int8", 100, 4,
+                               error_feedback="none")
+    assert not dense_comp.supports_sparse_receive
+    attacked = VectorChannel("uplink", "topk:0.1", 100, 4,
+                             error_feedback="none",
+                             attack_hook=lambda k, x: x)
+    assert not attacked.supports_sparse_receive
+    with pytest.raises(AssertionError, match="transmit_sparse"):
+        ef.transmit_sparse(jnp.zeros((4, 100)), ef.init_state())
+
+
+# ------------------------- sparse-domain center ---------------------------
+
+
+def _sparse_center_cfg(**kw):
+    base = dict(M=10.0, compressor="topk:0.2", error_feedback="none",
+                aggregator="mean", solver_iters=50)
+    base.update(kw)
+    return NewtonConfig(**base)
+
+
+@pytest.mark.parametrize("aggregator", ["mean", "norm_trim:0.25"])
+def test_sparse_center_matches_dense_trajectory(aggregator, logistic_data):
+    """ISSUE acceptance: the sparse-domain center is the SAME algorithm —
+    sparse_center auto (on) vs forced dense agree along the whole
+    trajectory, for the mean and norm-trim rules."""
+    Xm, ym = logistic_data
+    w0 = jnp.zeros(20)
+    runs = {}
+    for forced, label in ((None, "sparse"), (False, "dense")):
+        algo = DistributedCubicNewton(
+            logistic_loss,
+            _sparse_center_cfg(aggregator=aggregator, sparse_center=forced))
+        w, hist = algo.run(w0, Xm, ym, 4, key=jax.random.PRNGKey(3))
+        runs[label] = (w, hist, algo)
+    assert runs["sparse"][2]._use_sparse_center
+    assert not runs["dense"][2]._use_sparse_center
+    np.testing.assert_allclose(np.asarray(runs["sparse"][0]),
+                               np.asarray(runs["dense"][0]), atol=1e-5)
+    np.testing.assert_allclose(runs["sparse"][1]["loss"],
+                               runs["dense"][1]["loss"], atol=1e-5)
+    np.testing.assert_allclose(runs["sparse"][1]["uplink_delta"],
+                               runs["dense"][1]["uplink_delta"], atol=1e-5)
+    # identical wire: the receive-side representation is not the payload
+    assert runs["sparse"][1]["total_bits"] == runs["dense"][1]["total_bits"]
+
+
+def test_sparse_center_auto_gates_off():
+    """Auto mode must fall back to dense whenever any gate condition
+    fails — EF, a non-sparse compressor, an update attack, or an
+    aggregator without a sparse path."""
+    for cfg, attack in [
+        (_sparse_center_cfg(error_feedback="ef21"), AttackConfig()),
+        (_sparse_center_cfg(compressor="int8"), AttackConfig()),
+        (_sparse_center_cfg(compressor=None), AttackConfig()),
+        (_sparse_center_cfg(aggregator="krum:1"), AttackConfig()),
+        (_sparse_center_cfg(), AttackConfig(name="gaussian", alpha=0.25)),
+    ]:
+        algo = DistributedCubicNewton(logistic_loss, cfg, attack)
+        algo._ensure_channels(20, 10)
+        assert not algo._use_sparse_center, (cfg, attack)
+        assert algo._agg_kernel_label() == "dense"
+
+
+def test_sparse_center_demand_raises_when_unsupported():
+    algo = DistributedCubicNewton(
+        logistic_loss,
+        _sparse_center_cfg(error_feedback="ef21", sparse_center=True))
+    with pytest.raises(ValueError, match="sparse_center=True"):
+        algo._ensure_channels(20, 10)
+
+
+def test_center_bytes_per_round_and_label():
+    """center_bytes: O(m·k) + the (d,) aggregate sparse, O(m·d) dense."""
+    algo = DistributedCubicNewton(logistic_loss, _sparse_center_cfg())
+    algo._ensure_channels(20, 10)
+    k = algo.uplink.compressor.k
+    assert algo._use_sparse_center
+    assert algo._agg_kernel_label() == "sparse"
+    assert algo.center_bytes_per_round() == 10 * k * 8 + 4 * 20
+    dense = DistributedCubicNewton(
+        logistic_loss, _sparse_center_cfg(sparse_center=False))
+    dense._ensure_channels(20, 10)
+    assert dense.center_bytes_per_round() == 10 * 20 * 4 + 4 * 20
+    fused = DistributedCubicNewton(
+        logistic_loss, NewtonConfig(aggregator="krum_kernel:2"))
+    fused._ensure_channels(20, 10)
+    assert fused._agg_kernel_label() == "fused"
+
+
+def _center_avals(fn, *args):
+    """Every intermediate aval a traced center function materializes."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    avals = []
+    for eqn in jaxpr.jaxpr.eqns:
+        avals.extend(v.aval for v in eqn.outvars)
+    return avals
+
+
+def test_sparse_center_never_materializes_m_by_d():
+    """ISSUE acceptance shape probe: tracing the receive side — wire
+    payloads in, aggregate out — shows NO intermediate of m·d elements
+    (the dense worker matrix), for mean and norm-trim, at scatter and
+    gridded scale.  The dense center, traced the same way, DOES."""
+    from repro.api.aggregators import make_aggregator
+
+    m, k = 6, 32
+    for d in (2048, 16384):        # scatter path, gridded kernel path
+        vals = jnp.ones((m, k))
+        idx = jnp.tile(jnp.arange(k, dtype=jnp.int32), (m, 1))
+        for spec in ("mean", "norm_trim:0.25"):
+            agg = make_aggregator(spec)
+            avals = _center_avals(
+                lambda pv, pidx: agg.sparse(pv, pidx, d), vals, idx)
+            big = [a for a in avals
+                   if getattr(a, "size", 0) >= m * d]
+            assert not big, (spec, d, big)
+    # contrast: the XLA center path this replaces — scatter the payloads
+    # to dense, then aggregate — DOES materialize the (m, d) matrix
+    dense_agg = make_aggregator("mean")
+
+    def dense_center(pv, pidx):
+        dense = jnp.zeros((m, 16384)).at[
+            jnp.arange(m)[:, None], pidx].set(pv)
+        return dense_agg(dense)
+
+    avals = _center_avals(dense_center, jnp.ones((m, k)),
+                          jnp.tile(jnp.arange(k, dtype=jnp.int32), (m, 1)))
+    assert any(getattr(a, "size", 0) >= m * 16384 for a in avals)

@@ -7,25 +7,43 @@ import pytest
 
 from repro.kernels import (
     DEFAULT_BLOCK,
+    DENSE_FUSED_MAX_M,
     SINGLE_TILE_MAX_D,
+    SPARSE_SCATTER_MAX_D,
+    agg_kernel_plan,
+    aggregate_sparse,
+    aggregate_sparse_gridded,
+    aggregate_sparse_scatter,
     attention_bshd,
+    coordinate_median_fused,
     cubic_step,
     flash_attention,
     kernel_plan,
+    krum_scores_fused,
+    krum_select_fused,
     rmsnorm,
+    sort_workers_fused,
     topk_compress,
     topk_compress_sharded,
     topk_decompress,
+    trimmed_mean_fused,
 )
 from repro.kernels.cubic_step import cubic_solve_fused
 from repro.kernels.ref import (
     cubic_step_ref,
     flash_attention_ref,
+    krum_scores_ref,
     rmsnorm_ref,
+    sparse_aggregate_ref,
     topk_compress_ref,
     topk_compress_sharded_ref,
 )
 from repro.core import solve_cubic_exact
+from repro.core.aggregation import (
+    coordinate_median,
+    krum_select,
+    trimmed_mean,
+)
 
 
 @pytest.mark.parametrize("B,H,S,Dh", [(1, 1, 128, 64), (2, 3, 256, 64), (1, 2, 256, 128)])
@@ -256,6 +274,178 @@ def test_kernel_plan_rejects_bad_blocks():
         kernel_plan(4096, block=100)
     with pytest.raises(ValueError, match="VMEM"):
         kernel_plan(4096, block=4096)
+
+
+# ------------------- sparse-domain aggregation kernel ---------------------
+
+
+def _int_payload(m, k, d, seed, duplicates=False):
+    """Integer-valued float payloads: every partial sum is exactly
+    representable in f32, so dense/sparse/kernel paths must agree
+    bit-for-bit regardless of summation order."""
+    r = np.random.default_rng(seed)
+    vals = r.integers(-8, 9, size=(m, k)).astype(np.float32)
+    if duplicates:
+        idx = r.integers(0, d, size=(m, k)).astype(np.int32)
+    else:
+        idx = np.stack([np.sort(r.choice(d, size=k, replace=False))
+                        for _ in range(m)]).astype(np.int32)
+    return jnp.asarray(vals), jnp.asarray(idx)
+
+
+def _assert_sparse_parity(vals, idx, d, weights=None, exact=True):
+    """Auto-dispatch, gridded kernel and scatter fallback all equal the
+    numpy segmented-merge oracle."""
+    ref = sparse_aggregate_ref(np.asarray(vals), np.asarray(idx), d,
+                               None if weights is None else np.asarray(weights))
+    check = (np.testing.assert_array_equal if exact else
+             lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5,
+                                                     atol=1e-6))
+    check(np.asarray(aggregate_sparse(vals, idx, d, weights)), ref)
+    check(np.asarray(aggregate_sparse_gridded(vals, idx, d, weights)), ref)
+    check(np.asarray(aggregate_sparse_scatter(vals, idx, d, weights)), ref)
+
+
+@pytest.mark.parametrize("m,k,d", [
+    (1, 1, 8),            # degenerate single worker, single entry
+    (1, 16, 2048),        # m=1 at scatter scale
+    (4, 32, 1408),        # scatter path, non-multiple-of-block d
+    (8, 64, 8192),        # gridded path
+    (3, 16, 65537),       # gridded, d past the ISSUE's 65536 + odd edge
+    (4, 32, 65536),       # the ISSUE's sparse-path scale floor
+])
+def test_sparse_agg_integer_sweep(m, k, d):
+    """Segmented merge vs the numpy oracle, bit-exact on integer-valued
+    payloads across the scatter/gridded boundary (ISSUE: d up to 65536)."""
+    vals, idx = _int_payload(m, k, d, seed=m * 10007 + k * 101 + d)
+    _assert_sparse_parity(vals, idx, d)
+
+
+@pytest.mark.parametrize("d", [512, 8192])
+def test_sparse_agg_duplicate_indices(d):
+    """Duplicate coordinates — within a worker and across workers — merge
+    lowest-index-first; the dedup prepass keeps the kernel exact."""
+    vals, idx = _int_payload(6, 40, min(d, 50), seed=d, duplicates=True)
+    _assert_sparse_parity(vals, idx, d)
+
+
+@pytest.mark.parametrize("d", [1024, 9000])
+def test_sparse_agg_all_zero_payload(d):
+    vals = jnp.zeros((5, 12), jnp.float32)
+    idx = jnp.tile(jnp.arange(12, dtype=jnp.int32), (5, 1))
+    _assert_sparse_parity(vals, idx, d)
+    np.testing.assert_array_equal(
+        np.asarray(aggregate_sparse(vals, idx, d)), np.zeros(d, np.float32))
+
+
+@pytest.mark.parametrize("d", [2048, 16384])
+def test_sparse_agg_weighted(d):
+    """Per-worker weights (the norm-trim keep mask) fold into the merge;
+    0/1 and small-integer weights stay exact."""
+    vals, idx = _int_payload(7, 24, d, seed=d + 1)
+    w01 = jnp.asarray([1, 0, 1, 1, 0, 1, 0], jnp.float32)
+    _assert_sparse_parity(vals, idx, d, weights=w01)
+    w_int = jnp.asarray([2, 1, 3, 1, 2, 1, 4], jnp.float32)
+    _assert_sparse_parity(vals, idx, d, weights=w_int)
+
+
+def test_sparse_agg_float_payloads(rng):
+    """Dense random floats with distinct per-worker coordinates: every
+    coordinate receives its contributions in the same (worker) order on
+    every path, so parity holds to float tolerance."""
+    for d in (3000, 20000):
+        k1 = jax.random.fold_in(rng, d)
+        vals = jax.random.normal(k1, (5, 64))
+        idx = jnp.asarray(np.stack([
+            np.sort(np.random.default_rng(d + i).choice(d, 64, replace=False))
+            for i in range(5)]).astype(np.int32))
+        _assert_sparse_parity(vals, idx, d, exact=False)
+
+
+def test_sparse_agg_block_width_invariance():
+    """The aggregate must not depend on the gridded launch's block."""
+    vals, idx = _int_payload(6, 48, 40000, seed=3)
+    o1 = aggregate_sparse_gridded(vals, idx, 40000, block=512)
+    o2 = aggregate_sparse_gridded(vals, idx, 40000, block=1024)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_agg_kernel_plan_dispatch_and_rejects():
+    """kernel_plan-style auto-dispatch boundaries + build-time ValueError
+    on blocks the TPU tiling cannot serve."""
+    assert agg_kernel_plan(8, SPARSE_SCATTER_MAX_D, k=64)[0] == "scatter"
+    assert agg_kernel_plan(8, SPARSE_SCATTER_MAX_D + 1, k=64)[0] \
+        == "sparse_gridded"
+    assert agg_kernel_plan(DENSE_FUSED_MAX_M, 4096)[0] == "fused"
+    assert agg_kernel_plan(DENSE_FUSED_MAX_M + 1, 4096)[0] == "dense"
+    plan, P = agg_kernel_plan(10, 4096)
+    assert plan == "fused" and P == 16   # m padded to a power of two
+    with pytest.raises(ValueError, match="multiple of 128"):
+        agg_kernel_plan(8, 65536, k=64, block=100)
+    with pytest.raises(ValueError, match="VMEM"):
+        agg_kernel_plan(8, 65536, k=64, block=8192)
+    with pytest.raises(ValueError, match="multiple of 128"):
+        agg_kernel_plan(8, 4096, block=100)
+
+
+# ------------------- fused distance kernels (krum / row sort) -------------
+
+
+@pytest.mark.parametrize("m,d", [(4, 64), (6, 600), (10, 1024), (13, 1500)])
+@pytest.mark.parametrize("n_byz", [1, 2])
+def test_krum_scores_vs_naive_ref(m, d, n_byz, rng):
+    """Fused krum scores equal the naive O(m²) double-loop oracle and the
+    selection equals the registry's krum_select."""
+    flat = jax.random.normal(jax.random.fold_in(rng, m * 1000 + d), (m, d))
+    scores = krum_scores_fused(flat, n_byz)
+    ref = krum_scores_ref(np.asarray(flat), n_byz)
+    np.testing.assert_allclose(np.asarray(scores), ref, rtol=2e-5)
+    assert int(krum_select_fused(flat, n_byz)) == int(krum_select(flat, n_byz))
+
+
+def test_krum_integer_payload_exact(rng):
+    """Integer-valued stacks: squared distances and partial sums are
+    exact in f32, so the fused scores match the oracle bit-for-bit."""
+    r = np.random.default_rng(11)
+    flat = jnp.asarray(r.integers(-5, 6, size=(8, 700)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(krum_scores_fused(flat, 2)),
+        krum_scores_ref(np.asarray(flat), 2).astype(np.float32))
+
+
+@pytest.mark.parametrize("m,d", [(2, 100), (5, 512), (8, 513), (16, 2000)])
+def test_sort_workers_fused_exact(m, d, rng):
+    """The tiled bitonic network is a pure permutation: bit-equal to
+    jnp.sort over the worker axis, including +inf row padding."""
+    x = jax.random.normal(jax.random.fold_in(rng, m * 31 + d), (m, d))
+    np.testing.assert_array_equal(
+        np.asarray(sort_workers_fused(x)), np.asarray(jnp.sort(x, axis=0)))
+
+
+@pytest.mark.parametrize("m", [3, 4, 9, 12])
+@pytest.mark.parametrize("trim_frac", [0.0, 0.2, 0.4])
+def test_trimmed_mean_fused_matches_registry(m, trim_frac, rng):
+    x = jax.random.normal(jax.random.fold_in(rng, m), (m, 777))
+    np.testing.assert_array_equal(
+        np.asarray(trimmed_mean_fused(x, trim_frac)),
+        np.asarray(trimmed_mean(x, trim_frac)))
+
+
+@pytest.mark.parametrize("m", [2, 3, 6, 11])
+def test_coordinate_median_fused_matches_registry(m, rng):
+    """Odd and even m (jnp.median's (low + high) / 2 midpoint)."""
+    x = jax.random.normal(jax.random.fold_in(rng, 100 + m), (m, 640))
+    np.testing.assert_array_equal(
+        np.asarray(coordinate_median_fused(x)),
+        np.asarray(coordinate_median(x)))
+
+
+def test_fused_rules_reject_oversized_m(rng):
+    big = jnp.zeros((DENSE_FUSED_MAX_M + 1, 256))
+    with pytest.raises(ValueError, match="registry path"):
+        krum_scores_fused(big, 2)
+    with pytest.raises(ValueError, match="registry path"):
+        sort_workers_fused(big)
 
 
 @pytest.mark.parametrize("N,d", [(128, 256), (256, 512), (64, 1024)])

@@ -14,6 +14,20 @@ from hypothesis import given, settings, strategies as st
 
 from repro.compression import make_compressor
 from repro.core import norm_trim, solve_cubic_exact, cubic_model_value
+from repro.core.aggregation import (
+    coordinate_median,
+    krum_select,
+    mean as agg_mean,
+    trimmed_mean,
+)
+from repro.kernels import (
+    aggregate_sparse,
+    coordinate_median_fused,
+    krum_scores_fused,
+    krum_select_fused,
+    trimmed_mean_fused,
+)
+from repro.kernels.ref import krum_scores_ref, sparse_aggregate_ref
 from repro.core.tree_util import tree_dot, tree_randn_like
 from repro.models.attention import chunked_attention, reference_attention
 from repro.models.mamba2 import ssd_chunked, ssd_reference
@@ -190,6 +204,123 @@ def test_topk_sharded_blocked_oracle_matches_flat_oracle(d, seed):
     vr, ir = topk_compress_ref(x, k)
     np.testing.assert_array_equal(np.asarray(ib), np.asarray(ir))
     np.testing.assert_array_equal(np.asarray(vb), np.asarray(vr))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=12),     # m
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_sort_based_rules_permutation_invariant(m, seed):
+    """Trimmed-mean and coordinate-median only see the per-coordinate
+    sorted stack, so permuting workers changes NOTHING — exact equality,
+    on the registry path and the fused-kernel path alike."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(m, 50)).astype(np.float32))
+    up = u[jnp.asarray(rng.permutation(m))]
+    np.testing.assert_array_equal(np.asarray(trimmed_mean(u, 0.2)),
+                                  np.asarray(trimmed_mean(up, 0.2)))
+    np.testing.assert_array_equal(np.asarray(coordinate_median(u)),
+                                  np.asarray(coordinate_median(up)))
+    np.testing.assert_array_equal(np.asarray(trimmed_mean_fused(u, 0.2)),
+                                  np.asarray(trimmed_mean_fused(up, 0.2)))
+    np.testing.assert_array_equal(np.asarray(coordinate_median_fused(u)),
+                                  np.asarray(coordinate_median_fused(up)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=10),     # m
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_mean_and_norm_trim_permutation_invariant(m, seed):
+    """Mean/norm-trim aggregates are worker-order free (float summation
+    order moves, so allclose; norms are distinct w.p. 1 on normals)."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(m, 30)).astype(np.float32))
+    perm = jnp.asarray(rng.permutation(m))
+    np.testing.assert_allclose(np.asarray(agg_mean(u)),
+                               np.asarray(agg_mean(u[perm])), atol=1e-6)
+    a1, _ = norm_trim(u, 0.25)
+    a2, _ = norm_trim(u[perm], 0.25)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=12),     # m
+    st.integers(min_value=1, max_value=2),      # n_byz
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_krum_permutation_equivariant(m, n_byz, seed):
+    """Krum selects the same WORKER under any permutation (scores are
+    distinct w.p. 1): perm[selected(permuted)] == selected(original) —
+    registry and fused-kernel paths."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(m, 40)).astype(np.float32))
+    perm = rng.permutation(m)
+    up = u[jnp.asarray(perm)]
+    sel = int(krum_select(u, n_byz))
+    assert perm[int(krum_select(up, n_byz))] == sel
+    assert int(krum_select_fused(u, n_byz)) == sel
+    assert perm[int(krum_select_fused(up, n_byz))] == sel
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=12),     # m
+    st.sampled_from([32, 300]),                 # d
+    st.integers(min_value=1, max_value=2),      # n_byz
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_krum_fused_score_equals_naive_double_loop(m, d, n_byz, seed):
+    """ISSUE invariant: the fused kernel's on-chip scores equal the naive
+    O(m²) double-loop definition, and the selections agree."""
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(krum_scores_fused(flat, n_byz)),
+                               krum_scores_ref(np.asarray(flat), n_byz),
+                               rtol=2e-5)
+    assert int(krum_select_fused(flat, n_byz)) == int(krum_select(flat, n_byz))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=12),     # m
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_trimmed_mean_zero_trim_is_mean(m, seed):
+    """ISSUE invariant: trim_frac = 0 degenerates to the plain mean —
+    registry and fused paths (sort-then-mean vs mean: allclose)."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(m, 64)).astype(np.float32))
+    ref = np.asarray(agg_mean(u))
+    np.testing.assert_allclose(np.asarray(trimmed_mean(u, 0.0)), ref,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(trimmed_mean_fused(u, 0.0)), ref,
+                               atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=8),      # m
+    st.sampled_from([1500, 9000]),              # d (scatter + gridded)
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_sparse_aggregate_permutation_invariant(m, d, seed):
+    """The sparse-domain center (kernel-backed mean path) is exactly
+    permutation invariant on integer-valued payloads — duplicate
+    coordinates included — and equals the numpy oracle."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.integers(-6, 7, size=(m, 24)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, d, size=(m, 24)).astype(np.int32))
+    perm = jnp.asarray(rng.permutation(m))
+    out = aggregate_sparse(vals, idx, d)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(aggregate_sparse(vals[perm], idx[perm], d)))
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        sparse_aggregate_ref(np.asarray(vals), np.asarray(idx), d))
 
 
 @settings(max_examples=40, deadline=None)

@@ -229,6 +229,33 @@ def test_cli_plan_and_report_roundtrip(plan, tmp_path, capsys):
     assert "cells planned" in out and "sweep report" in out
 
 
+def test_report_plots_render_panels(plan, tmp_path, capsys):
+    """--plots renders the Fig. 1-3 panels from the same store the
+    tables pivot (matplotlib-gated — skipped when it is absent)."""
+    pytest.importorskip("matplotlib")
+    import os
+
+    from repro.sweep.report import plots
+
+    store = ResultStore(str(tmp_path / "p.jsonl"))
+    run_plan(plan, store)
+    out_dir = str(tmp_path / "plots")
+    written = plots(store, out_dir)
+    assert written and all(os.path.exists(p) for p in written)
+    names = {os.path.basename(p) for p in written}
+    # the grid is all-attacked with grad_norm/bits series: Figs. 1-2 and
+    # the bits-to-ε panel must render; Fig. 3 needs attack-free cells
+    assert "fig12_resilience.png" in names
+    assert "fig_bits_to_eps.png" in names
+    assert capsys.readouterr().out.count("wrote")
+    # CLI path: the flag drives the same renderer after the tables
+    from repro.sweep.__main__ import main
+
+    assert main(["report", store.path, "--plots",
+                 str(tmp_path / "plots2")]) == 0
+    assert os.path.exists(str(tmp_path / "plots2" / "fig12_resilience.png"))
+
+
 # ------------------------------------------------- benchmark thin views
 def test_fig12_thin_view_pivots_only_its_plan(tmp_path):
     """A reused store may hold other grids (other T, other compressors);

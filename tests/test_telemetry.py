@@ -343,3 +343,60 @@ def test_telemetry_report_aggregates(tel, tmp_path):
     span_names = {r["span"] for r in rep["spans"]}
     assert "sweep.cell.run" in span_names
     assert any("sweep report" not in ln and "cells:" in ln for ln in lines)
+
+
+# ----------------------------------------------- schema v2 (center path)
+
+
+def test_round_records_carry_center_path_fields(tel):
+    """v2 round records carry center_bytes + agg_kernel, and the
+    newton.center_bytes gauge mirrors them — sparse and dense paths."""
+    spec = ExperimentSpec(problem="synthetic-logistic:120:12", m_workers=4,
+                          aggregator="mean", compressor="topk:0.25",
+                          error_feedback="none")
+    exp = spec.build()
+    exp.run(2)
+    events = _events(tel)
+    rounds = [e for e in events if e["kind"] == "round"]
+    assert rounds and all(e["v"] == 2 for e in rounds)
+    d, m = 12, 4
+    k = max(1, round(0.25 * d))
+    for r in rounds:
+        assert r["agg_kernel"] == "sparse"
+        assert r["center_bytes"] == m * k * 8 + 4 * d
+    gauges = [e for e in events if e["kind"] == "gauge"
+              and e["name"] == "newton.center_bytes"]
+    assert len(gauges) == len(rounds)
+    assert all(g["value"] == rounds[0]["center_bytes"] for g in gauges)
+    assert validate_stream(json.dumps(e) for e in events) == []
+
+
+def test_round_record_dense_path_fields(tel):
+    spec = ExperimentSpec(**PAPER_KW)   # norm_trim + gaussian attack ⇒ dense
+    exp = spec.build()
+    exp.run(2)
+    rounds = [e for e in _events(tel) if e["kind"] == "round"]
+    d, m = 12, 4
+    for r in rounds:
+        assert r["agg_kernel"] == "dense"
+        assert r["center_bytes"] == m * d * 4 + 4 * d
+
+
+def test_schema_v2_validator_coverage():
+    """v1 events stay valid forever; v2 field constraints enforced;
+    unknown versions rejected."""
+    from repro.telemetry.schema import ACCEPTED_VERSIONS, SCHEMA_VERSION
+
+    assert SCHEMA_VERSION == 2 and ACCEPTED_VERSIONS == (1, 2)
+    base = {"kind": "round", "name": "newton.round", "ts": 0.1,
+            "wall": 1.0, "step": 0}
+    assert validate_event({**base, "v": 1}) == []          # v1 round: valid
+    assert validate_event({**base, "v": 2, "center_bytes": 128,
+                           "agg_kernel": "sparse"}) == []
+    assert validate_event({**base, "v": 3})                # unknown version
+    assert any("agg_kernel" in p for p in
+               validate_event({**base, "v": 2, "agg_kernel": "vectorized"}))
+    assert any("center_bytes" in p for p in
+               validate_event({**base, "v": 2, "center_bytes": -4}))
+    assert any("center_bytes" in p for p in
+               validate_event({**base, "v": 2, "center_bytes": 3.5}))
