@@ -51,6 +51,7 @@ def main(argv=None) -> None:
         return os.path.join(args.sweep_store_dir, f"{name}.jsonl")
 
     from . import (
+        async_staleness,
         fig3_convergence,
         fig12_byzantine,
         saddle_escape,
@@ -217,6 +218,33 @@ def main(argv=None) -> None:
     _emit("saddle/newton_under_saddle_attack", dt,
           f"final={se['newton_saddle_attack']['loss'][-1]:.4f}")
     all_results["saddle_escape"] = se
+
+    # ---- Resilience vs staleness (async runtime; beyond-paper) ------------
+    t0 = time.time()
+    with tel.span("bench.async_staleness"):
+        ast = async_staleness.run(
+            T=8 if args.full else (2 if args.dryrun else 6),
+            stalenesses=(0, 1, 4) if not args.dryrun else (0, 1),
+            participations=(1.0, 0.5),
+            alphas=(0.0, 0.2) if not args.dryrun else (0.2,),
+        )
+    dt = (time.time() - t0) * 1e6 / max(len(ast["cells"]), 1)
+    for cell in ast["cells"]:
+        esc = cell["saddle_escape_step"]
+        _emit(
+            f"async/stale={cell['staleness']}/p={cell['participation']:g}"
+            f"/alpha={cell['alpha']:g}",
+            dt,
+            f"final={cell['loss'][-1]:.4f} "
+            f"escape={'miss' if esc is None else esc} "
+            f"up_bits={cell['uplink_bits']}",
+        )
+    if "degenerate_bit_exact" in ast:
+        _emit("async/degenerate_bit_exact", 0.0,
+              f"bit_exact={ast['degenerate_bit_exact']}")
+        assert ast["degenerate_bit_exact"], \
+            "degenerate async cell must be bit-exact with runtime='paper'"
+    all_results["async_staleness"] = ast
 
     # ---- Roofline: dry-run aggregation + kernel micro-bench ---------------
     if not args.skip_roofline:

@@ -37,6 +37,19 @@ from .problems import fixed_workers, make_problem, problem_dim
 _PAPER_SOLVER_ITERS = 500   # Algorithm 2 while-loop cap (paper runtime)
 _MESH_SOLVER_ITERS = 4      # fixed inner iterations (static mesh program)
 
+#: async-runtime axes and their degenerate-synchronous defaults.  At
+#: these values the async runtime runs the synchronous program (bit-
+#: exact), so ``to_dict`` omits default-valued axes — pre-async spec
+#: dicts (and their sweep-store spec hashes) are unchanged byte for
+#: byte, and every existing store entry stays addressable.
+_ASYNC_AXIS_DEFAULTS = {
+    "participation": 1.0,
+    "staleness": 0,
+    "drop": 0.0,
+    "duplicate": 0.0,
+    "staleness_decay": 0.5,
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
@@ -44,7 +57,7 @@ class ExperimentSpec:
 
     # -- problem / runtime selector --------------------------------------
     problem: str = "synthetic-logistic:4000:40"
-    runtime: str = "paper"          # "paper" | "mesh"
+    runtime: str = "paper"          # "paper" | "mesh" | "async"
     m_workers: int = 20
     # -- solver (Algorithm 1 / 2) ----------------------------------------
     M: float = 10.0
@@ -66,10 +79,22 @@ class ExperimentSpec:
     alpha: float = 0.0              # Byzantine fraction
     num_classes: int = 2
     seed: int = 0
+    # -- async-runtime axes (runtime="async"; see _ASYNC_AXIS_DEFAULTS) --
+    participation: float = 1.0      # per-round cohort fraction ∈ (0, 1]
+    staleness: int = 0              # max rounds a packet lags (uniform)
+    drop: float = 0.0               # P(packet never arrives) ∈ [0, 1]
+    duplicate: float = 0.0          # P(packet delivered twice) ∈ [0, 1]
+    staleness_decay: float = 0.5    # arrival weight decay**age ∈ (0, 1]
 
     # ------------------------------------------------------------ serde
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # default-valued async axes are omitted: pre-async spec dicts
+        # (and their sweep-store hashes) stay byte-identical
+        for key, default in _ASYNC_AXIS_DEFAULTS.items():
+            if d[key] == default:
+                del d[key]
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ExperimentSpec":
@@ -104,7 +129,7 @@ class ExperimentSpec:
         on the mesh runtime (stateful steps are opt-in at scale)."""
         if self.error_feedback is not None:
             return self.error_feedback
-        if self.runtime == "paper" and self.any_compressor:
+        if self.runtime in ("paper", "async") and self.any_compressor:
             return "ef21"
         return "none"
 
@@ -115,9 +140,47 @@ class ExperimentSpec:
 
     # --------------------------------------------------------- validation
     def validate(self) -> "ExperimentSpec":
-        if self.runtime not in ("paper", "mesh"):
+        if self.runtime not in ("paper", "mesh", "async"):
             raise SpecError(
-                f"runtime must be 'paper' or 'mesh', got {self.runtime!r}"
+                f"runtime must be 'paper', 'mesh', or 'async', "
+                f"got {self.runtime!r}"
+            )
+        # async axes: range checks always, non-defaults only on async
+        if not 0.0 < self.participation <= 1.0:
+            raise SpecError(
+                f"participation={self.participation!r}: the per-round "
+                f"cohort fraction must lie in (0, 1]"
+            )
+        if not isinstance(self.staleness, int) or self.staleness < 0:
+            raise SpecError(
+                f"staleness={self.staleness!r}: the max packet lag must "
+                f"be an int ≥ 0 (rounds)"
+            )
+        for field in ("drop", "duplicate"):
+            if not 0.0 <= getattr(self, field) <= 1.0:
+                raise SpecError(
+                    f"{field}={getattr(self, field)!r}: packet-fault "
+                    f"probabilities must lie in [0, 1]"
+                )
+        if not 0.0 < self.staleness_decay <= 1.0:
+            raise SpecError(
+                f"staleness_decay={self.staleness_decay!r}: the arrival "
+                f"weight decay must lie in (0, 1]"
+            )
+        if self.runtime != "async":
+            for field, default in _ASYNC_AXIS_DEFAULTS.items():
+                if getattr(self, field) != default:
+                    raise SpecError(
+                        f"{field}={getattr(self, field)!r} is an async-"
+                        f"runtime axis, but runtime={self.runtime!r} — "
+                        f"set runtime='async' (or drop the override)"
+                    )
+        if self.runtime == "async" and self.exact_gradient:
+            raise SpecError(
+                "exact_gradient=True (the Remark-5 two-round mode) needs "
+                "a per-round global barrier for the gradient round, which "
+                "the async runtime removes — use runtime='paper' for the "
+                "two-round experiments"
             )
         if self.m_workers < 2:
             raise SpecError(
@@ -225,12 +288,13 @@ class ExperimentSpec:
                 f"('quadratic:<d>') or problem='external' (supply your own "
                 f"loss through to_distributed_config), got {self.problem!r}"
             )
-        if self.runtime == "paper" and (
+        if self.runtime in ("paper", "async") and (
                 self.problem.startswith("quadratic")
                 or self.problem == "external"):
             raise SpecError(
-                f"problem {self.problem!r} is mesh-only; the paper runtime "
-                f"takes a flat-vector problem from the catalog"
+                f"problem {self.problem!r} is mesh-only; the "
+                f"{self.runtime} runtime takes a flat-vector problem "
+                f"from the catalog"
             )
         return self
 
@@ -294,13 +358,29 @@ class Experiment:
     def __init__(self, spec: ExperimentSpec):
         self.spec = spec
         self.problem = make_problem(spec.problem, spec.m_workers, spec.seed)
-        if spec.runtime == "paper":
-            from ..core.newton import DistributedCubicNewton
-
+        if spec.runtime in ("paper", "async"):
             self.config = spec.to_newton_config()
-            self.algo = DistributedCubicNewton(
-                self.problem.loss_fn, self.config, spec.to_attack_config()
-            )
+            if spec.runtime == "async":
+                from ..async_rt import AsyncConfig, AsyncCubicNewton
+
+                self.algo = AsyncCubicNewton(
+                    self.problem.loss_fn, self.config,
+                    spec.to_attack_config(),
+                    AsyncConfig(
+                        participation=spec.participation,
+                        staleness=spec.staleness,
+                        drop=spec.drop, duplicate=spec.duplicate,
+                        staleness_decay=spec.staleness_decay,
+                        seed=spec.seed,
+                    ),
+                )
+            else:
+                from ..core.newton import DistributedCubicNewton
+
+                self.algo = DistributedCubicNewton(
+                    self.problem.loss_fn, self.config,
+                    spec.to_attack_config()
+                )
             self.step = None
         else:
             import jax

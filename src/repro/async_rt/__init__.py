@@ -1,0 +1,35 @@
+"""repro.async_rt — the asynchronous round runtime.
+
+Algorithm 1 under partial participation, staleness, and packet faults:
+a deterministic seeded event scheduler drives per-round cohort sampling
+and per-packet lag/drop/duplicate decisions, per-node message buffers
+deliver EF-compressed updates (channel state versioned per arrival) into
+a staleness-weighted registry aggregation, and exact WireLedger bit
+accounting is preserved packet by packet.  Degenerate configs
+(participation 1.0, staleness 0, no faults) delegate to the synchronous
+runtime's jitted step and are bit-exact with it.
+
+Spec surface: ``runtime: async`` plus the ``participation:`` /
+``staleness:`` / ``drop:`` / ``duplicate:`` / ``staleness_decay:`` axes
+on :class:`repro.api.ExperimentSpec`.
+"""
+from .aggregate import StalenessWeighted
+from .runtime import AsyncConfig, AsyncCubicNewton
+from .scheduler import (
+    EventScheduler,
+    Message,
+    MessageQueue,
+    cohort_size,
+    sample_cohort,
+)
+
+__all__ = [
+    "AsyncConfig",
+    "AsyncCubicNewton",
+    "EventScheduler",
+    "Message",
+    "MessageQueue",
+    "StalenessWeighted",
+    "cohort_size",
+    "sample_cohort",
+]

@@ -1,0 +1,160 @@
+"""Deterministic seeded event scheduler for the asynchronous runtime.
+
+One scheduler instance owns every host-side random decision the async
+round loop makes — which workers participate this round (cohort
+sampling), how many rounds a sent message lags (staleness), and the
+packet faults (drop / duplicate).  All of it is derived from counter-mode
+RNG streams keyed on ``(seed, decision-kind, round, worker, copy)`` via
+numpy's Philox bit generator, so
+
+* the same ``(seed, round)`` always yields the same cohort — on any
+  host, in any process, regardless of what was sampled before
+  (reproducibility is a pure function of the key, not of call order);
+* distinct decision kinds never share a stream (a different staleness
+  cap cannot change who participates);
+* nothing here touches JAX PRNG keys — the device-side randomness
+  (compressors, attacks) keeps the synchronous runtime's exact key
+  structure, which is what makes the degenerate async config bit-exact
+  with it.
+
+The message-buffer half (:class:`Message` / :class:`MessageQueue`) is
+the per-node mailbox: sends are pushed with an absolute arrival round,
+and ``pop_due(t)`` drains that round's arrivals in a deterministic
+order — ``(send_round, worker, copy)`` — so aggregation over the
+arrival stack is reproducible even when lags interleave workers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# stream salts: one per decision kind, so streams never collide
+_SALT_COHORT = 0x11
+_SALT_LAG = 0x22
+_SALT_DROP = 0x33
+_SALT_DUP = 0x44
+
+
+def _rng(seed: int, salt: int, *key: int) -> np.random.Generator:
+    """Counter-mode generator for one decision: keyed, never sequential."""
+    ss = np.random.SeedSequence(entropy=(int(seed), int(salt), *map(int, key)))
+    return np.random.Generator(np.random.Philox(ss))
+
+
+def cohort_size(m: int, participation: float) -> int:
+    """Per-round cohort size: ⌈nothing⌉ — round(p·m), floored at 1 so a
+    round is never a guaranteed no-op."""
+    return max(1, int(round(float(participation) * m)))
+
+
+def sample_cohort(seed: int, round_idx: int, m: int,
+                  participation: float) -> np.ndarray:
+    """The sorted worker ids participating in round ``round_idx``.
+
+    Sampled without replacement from ``range(m)``; a pure function of
+    ``(seed, round_idx, m, participation)``.  ``participation=1.0``
+    returns every worker.
+    """
+    c = cohort_size(m, participation)
+    if c >= m:
+        return np.arange(m)
+    rng = _rng(seed, _SALT_COHORT, round_idx)
+    return np.sort(rng.choice(m, size=c, replace=False))
+
+
+@dataclasses.dataclass
+class Message:
+    """One in-flight uplink packet: a worker's EF-compressed update.
+
+    ``payload`` is the reconstructed update the center will aggregate;
+    ``ef_row`` is the candidate per-worker channel/EF21 state row
+    produced by the send — the center commits it on the packet's FIRST
+    arrival (``version`` guards re-commits: duplicates and out-of-order
+    older sends never roll the committed state back).
+    """
+
+    worker: int
+    send_round: int
+    version: int          # the worker's send counter (== send_round here)
+    copy: int             # 0 = original, 1 = the duplicated packet
+    payload: object       # jax (d,) array
+    ef_row: Optional[object] = None   # candidate EF state row, or None
+
+    def sort_key(self):
+        return (self.send_round, self.worker, self.copy)
+
+
+class MessageQueue:
+    """Per-round arrival mailbox over all simulated nodes.
+
+    Host-side and deterministic: messages are pushed with an absolute
+    arrival round and drained with :meth:`pop_due`, which returns the
+    round's arrivals sorted by ``(send_round, worker, copy)``.
+    """
+
+    def __init__(self):
+        self._pending: list[tuple[int, Message]] = []
+
+    def push(self, arrival_round: int, msg: Message) -> None:
+        self._pending.append((int(arrival_round), msg))
+
+    def pop_due(self, round_idx: int) -> list[Message]:
+        due = [m for (arr, m) in self._pending if arr <= round_idx]
+        self._pending = [(arr, m) for (arr, m) in self._pending
+                         if arr > round_idx]
+        return sorted(due, key=Message.sort_key)
+
+    @property
+    def depth(self) -> int:
+        """In-flight messages still buffered (the worker-queue depth the
+        telemetry histogram tracks)."""
+        return len(self._pending)
+
+
+class EventScheduler:
+    """All per-round scheduling decisions, derived from one seed.
+
+    ``cohort(t)`` — who computes/sends in round t;
+    ``lag(t, i, copy)`` — rounds message (t, i, copy) spends in flight,
+    uniform over ``{0, …, staleness}``;
+    ``dropped(t, i, copy)`` / ``duplicated(t, i)`` — packet faults with
+    the configured probabilities.  Every decision is independent and
+    reproducible (see module doc).
+    """
+
+    def __init__(self, seed: int, m: int, *, participation: float = 1.0,
+                 staleness: int = 0, drop: float = 0.0,
+                 duplicate: float = 0.0):
+        self.seed = int(seed)
+        self.m = int(m)
+        self.participation = float(participation)
+        self.staleness = int(staleness)
+        self.drop = float(drop)
+        self.duplicate = float(duplicate)
+
+    def cohort(self, t: int) -> np.ndarray:
+        return sample_cohort(self.seed, t, self.m, self.participation)
+
+    def lag(self, t: int, worker: int, copy: int = 0) -> int:
+        if self.staleness <= 0:
+            return 0
+        rng = _rng(self.seed, _SALT_LAG, t, worker, copy)
+        return int(rng.integers(0, self.staleness + 1))
+
+    def dropped(self, t: int, worker: int, copy: int = 0) -> bool:
+        if self.drop <= 0.0:
+            return False
+        if self.drop >= 1.0:
+            return True
+        rng = _rng(self.seed, _SALT_DROP, t, worker, copy)
+        return bool(rng.random() < self.drop)
+
+    def duplicated(self, t: int, worker: int) -> bool:
+        if self.duplicate <= 0.0:
+            return False
+        if self.duplicate >= 1.0:
+            return True
+        rng = _rng(self.seed, _SALT_DUP, t, worker)
+        return bool(rng.random() < self.duplicate)

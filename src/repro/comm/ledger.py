@@ -23,11 +23,20 @@ event and ``snapshot`` as a ``ledger`` event on the global
 :mod:`repro.telemetry` stream when it is enabled (exact same ints, so
 the stream's wire events sum to the ledger totals by construction —
 ``python -m repro.telemetry validate --check-wire`` asserts it).  Each
-ledger carries a process-unique ``ledger_id`` pairing its events.
+ledger generation carries a ``(pid, ledger_id)`` pair identifying its
+events — ``ledger_id`` alone is only process-unique, and a parallel
+sweep pool's workers each start their own ``itertools.count``, so the
+validator must (and does) group by the pair.  Every wire event also
+carries a per-ledger sequence id ``seq`` and the snapshot the total
+record count, making validation **order-insensitive**: events may be
+interleaved, buffered, or merged out of order across async channels and
+pool workers — the sums and the seq-completeness check
+(``sorted(seqs) == range(n_records)``) are invariant to ordering.
 """
 from __future__ import annotations
 
 import itertools
+import os
 
 from ..telemetry import get_telemetry
 
@@ -37,13 +46,20 @@ _LEDGER_IDS = itertools.count()
 class WireLedger:
     """Exact integer uplink/downlink bit totals, accumulated host-side."""
 
-    __slots__ = ("uplink_bits", "downlink_bits", "rounds", "ledger_id")
+    __slots__ = ("uplink_bits", "downlink_bits", "rounds", "ledger_id",
+                 "pid", "_seq")
 
     def __init__(self) -> None:
-        self.ledger_id: int = next(_LEDGER_IDS)
         self.reset()
 
     def reset(self) -> None:
+        """Zero the totals and start a FRESH ledger generation: a new
+        ``ledger_id`` and seq stream, so back-to-back runs reusing one
+        ledger object never mix their events under a shared id (which
+        would break the validator's per-generation seq completeness)."""
+        self.ledger_id: int = next(_LEDGER_IDS)
+        self.pid: int = os.getpid()
+        self._seq: int = 0
         self.uplink_bits: int = 0
         self.downlink_bits: int = 0
         self.rounds: int = 0
@@ -56,11 +72,13 @@ class WireLedger:
         self.uplink_bits += int(uplink)
         self.downlink_bits += int(downlink)
         self.rounds += int(rounds)
+        seq = self._seq
+        self._seq = seq + 1
         tel = get_telemetry()
         if tel.enabled:
             tel.wire(ledger_id=self.ledger_id, uplink=int(uplink),
                      downlink=int(downlink), rounds=int(rounds),
-                     label=label)
+                     label=label, seq=seq, pid=self.pid)
 
     @property
     def total_bits(self) -> int:
@@ -78,7 +96,8 @@ class WireLedger:
         }
         tel = get_telemetry()
         if tel.enabled:
-            tel.ledger_snapshot(ledger_id=self.ledger_id, snapshot=snap)
+            tel.ledger_snapshot(ledger_id=self.ledger_id, snapshot=snap,
+                                n_records=self._seq, pid=self.pid)
         return snap
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety

@@ -95,11 +95,16 @@ class DistributedCubicNewton:
     data is stacked on a leading axis: ``X: (m, n, d)``, ``y: (m, n)``.
     One ``step`` = one communication round (two if ``exact_gradient``).
 
+    ``runtime_label`` names the runtime in emitted round records;
+    subclasses (the async runtime) override it.
+
     Channels (and their compressors / error-feedback wrappers) are
     resolved ONCE, lazily at the first step for the observed ``(d, m)``
     — never inside a trace.  ``self.ledger`` accumulates exact integer
     uplink/downlink bits host-side.
     """
+
+    runtime_label = "paper"
 
     def __init__(
         self,
@@ -455,7 +460,8 @@ class DistributedCubicNewton:
             if tel.enabled:
                 center_bytes = self.center_bytes_per_round()
                 tel.round(RoundRecord(
-                    step=t, runtime="paper", loss=loss, grad_norm=gn,
+                    step=t, runtime=self.runtime_label, loss=loss,
+                    grad_norm=gn,
                     model_decrease=(None if prev_loss is None
                                     else prev_loss - loss),
                     uplink_delta=delta_hat, k=k_live, k_changed=k_changed,

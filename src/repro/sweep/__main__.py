@@ -81,6 +81,10 @@ def _add_grid_args(p, with_run=False):
                        help="per-cell wall-time budget (cooperative)")
         p.add_argument("--limit", type=int, default=None,
                        help="build at most this many cells this invocation")
+        p.add_argument("--jobs", type=int, default=1, metavar="N",
+                       help="run cells on an N-worker process pool "
+                            "(spawn-context; merged stores stay byte-"
+                            "identical to --jobs 1)")
         p.add_argument("--retry-failed", action="store_true")
         p.add_argument("--retry-truncated", action="store_true",
                        help="re-run cells a previous --budget-s cut short")
@@ -158,7 +162,8 @@ def main(argv=None) -> int:
             plan, st, shard_index=idx, num_shards=num,
             time_budget_s=args.budget_s, limit=args.limit,
             retry_failed=args.retry_failed,
-            retry_truncated=args.retry_truncated, log=print,
+            retry_truncated=args.retry_truncated, jobs=args.jobs,
+            log=print,
         )
         print(f"[sweep] done: built={summary['built']} "
               f"cached={summary['cached']} failed={summary['failed']} "

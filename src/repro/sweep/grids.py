@@ -71,9 +71,33 @@ def fig12_full_grid(n_steps: int = 15, datasets=("a9a", "w8a"),
                       REGISTRY_AGGREGATORS, (None, "topk:0.1"), seed)
 
 
+def staleness_grid(n_steps: int = 8, participations=(1.0, 0.5),
+                   stalenesses=(0, 1, 4), alphas=(0.0, 0.2),
+                   seed: int = 0):
+    """Resilience-vs-staleness: the async runtime under the saddle
+    attack, sweeping cohort fraction × max packet lag × Byzantine
+    fraction on the matrix-factorization saddle problem.
+
+    The ``alpha=0, staleness=0, participation=1.0`` cell is the
+    degenerate async config — bit-exact with ``runtime="paper"`` (the
+    acceptance criterion's anchor cell); every other cell measures how
+    escape degrades as the cohort shrinks and updates arrive late.
+    """
+    axes = {
+        "staleness": list(stalenesses),
+        "participation": list(participations),
+        "alpha": list(alphas),
+    }
+    base = {"runtime": "async", "problem": "matrix-factor:8:2",
+            "m_workers": 10, "attack": "saddle", "aggregator": "norm_trim",
+            "M": 10.0, "seed": seed, "n_steps": n_steps}
+    return axes, base
+
+
 PRESETS = {
     "smoke": smoke_grid,
     "fig3": fig3_grid,
     "fig12": fig12_grid,
     "fig12-full": fig12_full_grid,
+    "staleness": staleness_grid,
 }

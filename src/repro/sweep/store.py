@@ -4,7 +4,7 @@ One line = one completed (or failed) sweep cell:
 
     {"hash": "…", "spec": {…}, "n_steps": T, "status": "ok"|"failed",
      "metrics": {…full history incl. exact WireLedger ints…},
-     "wall_time_s": 1.23, "error": "…"}
+     "wall_time_s": 1.23, "worker_id": 4242, "error": "…"}
 
 The **hash** is the identity of a cell: SHA-256 over the canonical JSON
 of ``{"n_steps": T, "spec": spec.to_dict()}`` (sorted keys, no
@@ -37,7 +37,9 @@ from ..api import ExperimentSpec
 STORE_VERSION = 1
 
 #: per-host / per-run diagnostics that must not affect merged-store bytes
-VOLATILE_KEYS = ("wall_time_s",)
+#: (wall time and the executor-pool worker pid vary run to run; stripping
+#: them is what keeps a ``--jobs N`` pool merge byte-identical to serial)
+VOLATILE_KEYS = ("wall_time_s", "worker_id")
 
 
 # ------------------------------------------------------------------ hash

@@ -28,33 +28,67 @@ def _load_events(path: str) -> list:
 
 def check_wire_exactness(events: list) -> list:
     """Every ledger snapshot's totals must equal the exact sum of the
-    wire events sharing its ``ledger_id`` (the acceptance criterion:
+    wire events from its ledger generation (the acceptance criterion:
     per-transmit bit events sum to the WireLedger's integer totals).
+
+    **Order-insensitive by construction**: events are grouped by
+    ``(pid, ledger_id)`` — ``ledger_id`` alone is only process-unique,
+    and a parallel sweep pool's workers each restart the counter — and
+    the check is a sum, invariant to interleaving/merge order.  When the
+    stream carries the v3 per-record ``seq`` ids and the snapshot's
+    ``n_records``, completeness is additionally asserted:
+    ``sorted(seqs) == range(n_records)`` (missing and duplicated wire
+    events are caught even when the sums coincidentally agree).
+    v1/v2 streams (no seq/pid) still validate sum-only.
+
     Returns problem strings (empty ⇒ exact)."""
-    sums: dict[int, dict] = {}
+    sums: dict[tuple, dict] = {}
     for ev in events:
         if ev.get("kind") == "wire":
-            slot = sums.setdefault(ev["ledger_id"],
-                                   {"uplink": 0, "downlink": 0, "rounds": 0})
+            gen = (ev.get("pid"), ev["ledger_id"])
+            slot = sums.setdefault(gen, {"uplink": 0, "downlink": 0,
+                                         "rounds": 0, "seqs": []})
             slot["uplink"] += ev["uplink"]
             slot["downlink"] += ev["downlink"]
             slot["rounds"] += ev["rounds"]
+            if "seq" in ev:
+                slot["seqs"].append(ev["seq"])
     problems = []
     n_checked = 0
     for ev in events:
         if ev.get("kind") != "ledger":
             continue
         n_checked += 1
-        lid = ev["ledger_id"]
-        got = sums.get(lid, {"uplink": 0, "downlink": 0, "rounds": 0})
+        gen = (ev.get("pid"), ev["ledger_id"])
+        label = (f"ledger {gen[1]}" if gen[0] is None
+                 else f"ledger {gen[1]} (pid {gen[0]})")
+        got = sums.get(gen, {"uplink": 0, "downlink": 0, "rounds": 0,
+                             "seqs": []})
         for wire_key, ledger_key in (("uplink", "uplink_bits"),
                                      ("downlink", "downlink_bits"),
                                      ("rounds", "rounds")):
             if got[wire_key] != ev[ledger_key]:
                 problems.append(
-                    f"ledger {lid}: sum(wire.{wire_key}) = "
+                    f"{label}: sum(wire.{wire_key}) = "
                     f"{got[wire_key]} but snapshot {ledger_key} = "
                     f"{ev[ledger_key]}"
+                )
+        n_records = ev.get("n_records")
+        if n_records is not None and got["seqs"]:
+            expected = list(range(n_records))
+            seqs = sorted(got["seqs"])
+            if seqs != expected:
+                missing = sorted(set(expected) - set(seqs))
+                extra = sorted(set(seqs) - set(expected))
+                dupes = sorted({s for s in seqs if seqs.count(s) > 1})
+                detail = ", ".join(filter(None, (
+                    f"missing seqs {missing}" if missing else "",
+                    f"unexpected seqs {extra}" if extra else "",
+                    f"duplicated seqs {dupes}" if dupes else "",
+                )))
+                problems.append(
+                    f"{label}: {len(seqs)} wire events vs n_records = "
+                    f"{n_records} ({detail or 'seq mismatch'})"
                 )
     if n_checked == 0:
         problems.append("--check-wire: no ledger snapshot events found")

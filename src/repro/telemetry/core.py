@@ -209,8 +209,13 @@ class Telemetry:
             )
 
     def wire(self, *, ledger_id: int, uplink: int, downlink: int,
-             rounds: int, label: Optional[str] = None) -> None:
-        """One ledger-record call: exact integer bits on the wire."""
+             rounds: int, label: Optional[str] = None,
+             seq: Optional[int] = None, pid: Optional[int] = None) -> None:
+        """One ledger-record call: exact integer bits on the wire.
+        ``seq`` is the ledger's per-generation sequence id and ``pid``
+        the emitting process — together they make validation
+        order-insensitive across async channels and pool workers (v1/v2
+        streams without them still validate sum-only)."""
         if not self._enabled:
             return
         ev = self._base("wire", "wire")
@@ -218,15 +223,28 @@ class Telemetry:
                   downlink=int(downlink), rounds=int(rounds))
         if label:
             ev["label"] = label
+        if seq is not None:
+            ev["seq"] = int(seq)
+        if pid is not None:
+            ev["pid"] = int(pid)
         self._emit(ev)
 
-    def ledger_snapshot(self, *, ledger_id: int, snapshot: dict) -> None:
+    def ledger_snapshot(self, *, ledger_id: int, snapshot: dict,
+                        n_records: Optional[int] = None,
+                        pid: Optional[int] = None) -> None:
         """End-of-run ledger totals (must equal the sum of this
-        ``ledger_id``'s wire events — the validator checks)."""
+        ledger generation's wire events — the validator checks).
+        ``n_records`` (the generation's record count) lets the
+        validator assert seq completeness; ``pid`` disambiguates
+        colliding per-process ledger_ids."""
         if not self._enabled:
             return
         ev = self._base("ledger", "ledger")
         ev["ledger_id"] = int(ledger_id)
+        if n_records is not None:
+            ev["n_records"] = int(n_records)
+        if pid is not None:
+            ev["pid"] = int(pid)
         ev.update({k: int(v) for k, v in snapshot.items()})
         self._emit(ev)
 

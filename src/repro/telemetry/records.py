@@ -20,7 +20,7 @@ class RoundRecord:
     """One communication round, as seen from the host loop."""
 
     step: int                                  # 0-based round index
-    runtime: str = "paper"                     # "paper" | "mesh"
+    runtime: str = "paper"                     # "paper" | "mesh" | "async"
     loss: Optional[float] = None
     grad_norm: Optional[float] = None
     model_decrease: Optional[float] = None     # f(w_t) − f(w_{t+1})
@@ -37,6 +37,12 @@ class RoundRecord:
                                                # bytes (O(m·k) sparse,
                                                # O(m·d) dense)
     agg_kernel: Optional[str] = None           # "sparse"|"fused"|"dense"
+    # async-runtime fields (schema v3; None on synchronous runtimes):
+    cohort_size: Optional[int] = None          # workers sampled this round
+    n_arrivals: Optional[int] = None           # messages delivered this round
+    queue_depth: Optional[int] = None          # still in flight after round
+    participation: Optional[float] = None      # configured cohort fraction
+    arrival_staleness: Optional[Sequence[int]] = None  # per-arrival ages
 
     def to_fields(self) -> dict:
         """Flatten to JSONL event fields (``None`` dropped, floats
@@ -61,6 +67,14 @@ class RoundRecord:
             out["center_bytes"] = int(self.center_bytes)
         if self.agg_kernel is not None:
             out["agg_kernel"] = str(self.agg_kernel)
+        for key in ("cohort_size", "n_arrivals", "queue_depth"):
+            v = getattr(self, key)
+            if v is not None:
+                out[key] = int(v)
+        if self.participation is not None:
+            out["participation"] = float(self.participation)
+        if self.arrival_staleness is not None:
+            out["arrival_staleness"] = [int(a) for a in self.arrival_staleness]
         return out
 
 

@@ -23,14 +23,21 @@ Per-kind required keys (on top of the base):
 * ``round``   — ``step`` (int ≥ 0); the flattened
   :class:`~repro.telemetry.RoundRecord` fields ride as optional keys
   (v2 adds ``center_bytes``, int ≥ 0, the center aggregation-path bytes,
-  and ``agg_kernel``, one of ``"sparse"``/``"fused"``/``"dense"``)
+  and ``agg_kernel``, one of ``"sparse"``/``"fused"``/``"dense"``; v3
+  adds the async-runtime fields ``cohort_size``/``n_arrivals``/
+  ``queue_depth`` (ints ≥ 0), ``participation`` (number), and
+  ``arrival_staleness``, a list of ints ≥ 0 — per-arrival ages)
 * ``wire``    — ``ledger_id`` (int), ``uplink`` (int ≥ 0),
   ``downlink`` (int ≥ 0), ``rounds`` (int ≥ 0): ONE ledger-record call,
-  exact integer bits
+  exact integer bits; v3 adds ``seq`` (int ≥ 0, the ledger generation's
+  per-record sequence id) and ``pid`` (int ≥ 0, the emitting process)
 * ``ledger``  — ``ledger_id``, ``uplink_bits``, ``downlink_bits``,
   ``total_bits``, ``rounds``: a ledger snapshot (end-of-run totals);
-  the wire events with the same ``ledger_id`` must sum to it exactly
-  (checked by ``python -m repro.telemetry validate --check-wire``)
+  the wire events from the same ledger generation — grouped
+  ``(pid, ledger_id)`` — must sum to it exactly, and when the snapshot
+  carries ``n_records`` (v3) their ``seq`` ids must cover exactly
+  ``0 … n_records−1`` in ANY order (checked by
+  ``python -m repro.telemetry validate --check-wire``)
 * ``compile`` — ``event`` (the JAX monitoring event tail, e.g.
   ``backend_compile``), ``dur_s``; optional ``scope`` (the
   :func:`~repro.telemetry.compile_scope` label active during the
@@ -45,12 +52,14 @@ from __future__ import annotations
 
 from numbers import Number
 
-#: version writers stamp on new events (2: RoundRecord grew
-#: ``center_bytes``/``agg_kernel``)
-SCHEMA_VERSION = 2
-#: versions the validator accepts — v1 streams carry a strict subset of
-#: the v2 round fields, so they stay valid forever
-ACCEPTED_VERSIONS = (1, 2)
+#: version writers stamp on new events (3: async round fields
+#: ``cohort_size``/``n_arrivals``/``queue_depth``/``participation``/
+#: ``arrival_staleness``; order-insensitive wire accounting via
+#: ``seq``/``pid`` on wire and ``n_records``/``pid`` on ledger events)
+SCHEMA_VERSION = 3
+#: versions the validator accepts — each older version carries a strict
+#: subset of the newer optional fields, so old streams stay valid forever
+ACCEPTED_VERSIONS = (1, 2, 3)
 
 KINDS = ("event", "span", "counter", "gauge", "hist", "round", "wire",
          "ledger", "compile")
@@ -81,6 +90,15 @@ EVENT_SCHEMA = {
         "args": {"type": "object"},
         "center_bytes": {"type": "integer", "minimum": 0},
         "agg_kernel": {"enum": ["sparse", "fused", "dense"]},
+        "seq": {"type": "integer", "minimum": 0},
+        "pid": {"type": "integer", "minimum": 0},
+        "n_records": {"type": "integer", "minimum": 0},
+        "cohort_size": {"type": "integer", "minimum": 0},
+        "n_arrivals": {"type": "integer", "minimum": 0},
+        "queue_depth": {"type": "integer", "minimum": 0},
+        "participation": {"type": "number"},
+        "arrival_staleness": {"type": "array",
+                              "items": {"type": "integer", "minimum": 0}},
     },
     "allOf": [
         {"if": {"properties": {"kind": {"const": "span"}}},
@@ -114,7 +132,8 @@ _REQUIRED_BY_KIND = {
 
 _NONNEG_INTS = ("step", "ledger_id", "uplink", "downlink", "rounds",
                 "uplink_bits", "downlink_bits", "total_bits",
-                "center_bytes")
+                "center_bytes", "seq", "pid", "n_records",
+                "cohort_size", "n_arrivals", "queue_depth")
 
 _AGG_KERNELS = ("sparse", "fused", "dense")
 
@@ -158,6 +177,18 @@ def validate_event(obj) -> list:
     if "agg_kernel" in obj and obj["agg_kernel"] not in _AGG_KERNELS:
         errors.append(f"agg_kernel must be one of {_AGG_KERNELS}, "
                       f"got {obj['agg_kernel']!r}")
+    if "participation" in obj:
+        if not isinstance(obj["participation"], Number) \
+                or isinstance(obj["participation"], bool):
+            errors.append(f"participation must be a number, "
+                          f"got {obj['participation']!r}")
+    if "arrival_staleness" in obj:
+        ages = obj["arrival_staleness"]
+        if not isinstance(ages, list) or any(
+                not isinstance(a, int) or isinstance(a, bool) or a < 0
+                for a in ages):
+            errors.append("arrival_staleness must be a list of "
+                          f"non-negative ints, got {ages!r}")
     return errors
 
 

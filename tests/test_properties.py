@@ -323,6 +323,54 @@ def test_sparse_aggregate_permutation_invariant(m, d, seed):
         sparse_aggregate_ref(np.asarray(vals), np.asarray(idx), d))
 
 
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=24),      # m
+    st.floats(min_value=0.01, max_value=1.0),    # participation
+    st.integers(min_value=0, max_value=10**4),   # round
+    st.integers(min_value=0, max_value=10**6),   # seed
+)
+def test_cohort_sampling_reproducible_without_replacement(m, p, t, seed):
+    """Async-runtime cohorts are a pure function of ``(seed, round)``:
+    re-sampling yields the identical sorted, duplicate-free subset of
+    ``range(m)`` with exactly ``cohort_size(m, p)`` members."""
+    from repro.async_rt import cohort_size, sample_cohort
+
+    c1 = sample_cohort(seed, t, m, p)
+    c2 = sample_cohort(seed, t, m, p)
+    np.testing.assert_array_equal(c1, c2)        # key-pure, not call-order
+    ids = c1.tolist()
+    assert len(ids) == cohort_size(m, p) == max(1, int(round(p * m)))
+    assert len(set(ids)) == len(ids)             # without replacement
+    assert ids == sorted(ids)
+    assert all(0 <= i < m for i in ids)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=16),      # m
+    st.integers(min_value=0, max_value=100),     # round
+    st.integers(min_value=1, max_value=7),       # staleness cap
+    st.integers(min_value=0, max_value=10**6),   # seed
+)
+def test_scheduler_decision_streams_independent(m, t, k, seed):
+    """Distinct decision kinds never share an RNG stream: turning faults
+    and staleness on cannot change who participates, and every sampled
+    lag respects the configured cap."""
+    from repro.async_rt import EventScheduler
+
+    quiet = EventScheduler(seed, m, participation=0.5)
+    noisy = EventScheduler(seed, m, participation=0.5, staleness=k,
+                           drop=0.3, duplicate=0.3)
+    np.testing.assert_array_equal(quiet.cohort(t), noisy.cohort(t))
+    for i in range(m):
+        assert quiet.lag(t, i) == 0
+        assert 0 <= noisy.lag(t, i) <= k
+        assert noisy.lag(t, i) == noisy.lag(t, i)          # deterministic
+        assert noisy.dropped(t, i) == noisy.dropped(t, i)
+        assert noisy.duplicated(t, i) == noisy.duplicated(t, i)
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     st.sampled_from(["topk:0.1", "topk:0.5", "signnorm", "int8", "int8:32"]),

@@ -349,8 +349,11 @@ def test_telemetry_report_aggregates(tel, tmp_path):
 
 
 def test_round_records_carry_center_path_fields(tel):
-    """v2 round records carry center_bytes + agg_kernel, and the
+    """Round records carry the v2 center-path fields (center_bytes +
+    agg_kernel) at the current schema version, and the
     newton.center_bytes gauge mirrors them — sparse and dense paths."""
+    from repro.telemetry.schema import SCHEMA_VERSION
+
     spec = ExperimentSpec(problem="synthetic-logistic:120:12", m_workers=4,
                           aggregator="mean", compressor="topk:0.25",
                           error_feedback="none")
@@ -358,7 +361,7 @@ def test_round_records_carry_center_path_fields(tel):
     exp.run(2)
     events = _events(tel)
     rounds = [e for e in events if e["kind"] == "round"]
-    assert rounds and all(e["v"] == 2 for e in rounds)
+    assert rounds and all(e["v"] == SCHEMA_VERSION for e in rounds)
     d, m = 12, 4
     k = max(1, round(0.25 * d))
     for r in rounds:
@@ -383,17 +386,17 @@ def test_round_record_dense_path_fields(tel):
 
 
 def test_schema_v2_validator_coverage():
-    """v1 events stay valid forever; v2 field constraints enforced;
+    """v1/v2 events stay valid forever; v2 field constraints enforced;
     unknown versions rejected."""
     from repro.telemetry.schema import ACCEPTED_VERSIONS, SCHEMA_VERSION
 
-    assert SCHEMA_VERSION == 2 and ACCEPTED_VERSIONS == (1, 2)
+    assert SCHEMA_VERSION == 3 and ACCEPTED_VERSIONS == (1, 2, 3)
     base = {"kind": "round", "name": "newton.round", "ts": 0.1,
             "wall": 1.0, "step": 0}
     assert validate_event({**base, "v": 1}) == []          # v1 round: valid
     assert validate_event({**base, "v": 2, "center_bytes": 128,
                            "agg_kernel": "sparse"}) == []
-    assert validate_event({**base, "v": 3})                # unknown version
+    assert validate_event({**base, "v": 4})                # unknown version
     assert any("agg_kernel" in p for p in
                validate_event({**base, "v": 2, "agg_kernel": "vectorized"}))
     assert any("center_bytes" in p for p in
