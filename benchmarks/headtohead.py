@@ -1,0 +1,64 @@
+"""Head-to-head — second-order vs first-order, per attack × aggregator.
+
+The paper's headline: ~25% better iteration complexity than first-order
+methods.  This benchmark regenerates the comparison from ONE sweep grid
+(the ``headtohead`` CLI preset, same cell hashes): ``cubic_newton`` vs
+``byzantine_pgd`` [Yin et al. 2019] vs ``compressed_sgd`` [Chen/Li/Chi
+2023] on w8a robust regression at m=20, η=1, per attack × aggregator —
+all three solvers transmitting through the same
+:class:`~repro.comm.VectorChannel` stack, so every reported bit is an
+exact :class:`~repro.comm.WireLedger` int (PGD escape-probe rounds
+included) and rounds-to-ε / bits-to-ε are comparable across the solver
+axis by construction.
+
+A thin view over :mod:`repro.sweep`: plan → run (cached cells are free)
+→ pivot the store through :func:`repro.sweep.headtohead_table`.
+"""
+from __future__ import annotations
+
+from repro.sweep import (
+    ResultStore,
+    headtohead_grid,
+    headtohead_table,
+    plan_grid,
+    run_plan,
+)
+
+
+def run(T=60, datasets=("w8a",), alphas=(0.2,), eps=0.05, seed=0,
+        store_path=None):
+    axes, base = headtohead_grid(n_steps=T, datasets=datasets,
+                                 alphas=alphas, seed=seed)
+    store = ResultStore(store_path)
+    plan = plan_grid(axes, base)
+    # the comparison's own grid must plan clean — a pruned cell means an
+    # un-coverable scenario was requested (the loud SpecError)
+    if plan.skipped:
+        raise RuntimeError(
+            f"headtohead grid: {len(plan.skipped)} cells skipped at plan "
+            f"time: " + "; ".join(s["reason"] for s in plan.skipped[:3])
+        )
+    run_plan(plan, store, retry_failed=True, retry_truncated=True)
+    recs = []
+    for rec in (store.get(h) for h in plan.hashes()):
+        # refuse to compare with holes: a failed or truncated cell would
+        # silently bias the round/bit ratios
+        if rec["status"] != "ok" or rec["metrics"].get("truncated"):
+            raise RuntimeError(
+                f"headtohead sweep cell {rec['hash']} "
+                f"{'truncated' if rec['status'] == 'ok' else rec['status']}"
+                f": {rec.get('error', 'rerun without --budget-s')}"
+                + (f" (store: {store_path})" if store_path else "")
+            )
+        recs.append(rec)
+    rows = headtohead_table(recs, eps=eps)
+    # ledger-exactness invariant: every reported bit count is an exact
+    # WireLedger int (integers end to end, no float estimate anywhere)
+    for rec in recs:
+        m = rec["metrics"]
+        assert m["uplink_bits"] + m["downlink_bits"] == m["total_bits"]
+    for row in rows:
+        for col, val in row.items():
+            if "_bits@" in col and val is not None:
+                assert isinstance(val, int), (col, val)
+    return rows

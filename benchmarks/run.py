@@ -54,6 +54,7 @@ def main(argv=None) -> None:
         async_staleness,
         fig3_convergence,
         fig12_byzantine,
+        headtohead,
         saddle_escape,
         table1_communication,
         roofline,
@@ -120,6 +121,31 @@ def main(argv=None) -> None:
             f"down_bits={row['newton_downlink_bits']}",
         )
     all_results["table1"] = t1
+
+    # ---- Head-to-head: solver axis (second- vs first-order) ---------------
+    # one sweep grid, all three solvers through the same channel stack;
+    # every bits@ε below is an exact WireLedger int
+    t0 = time.time()
+    with tel.span("bench.headtohead"):
+        h2h = headtohead.run(
+            T=60 if args.full else (2 if args.dryrun else 20),
+            datasets=("a9a",) if args.dryrun else ("w8a",),
+            eps=0.3 if args.dryrun else 0.05,
+            store_path=_store("headtohead"),
+        )
+    dt = time.time() - t0
+    for row in h2h:
+        eps_cols = " ".join(
+            f"{c}={'miss' if v is None else v}" for c, v in row.items()
+            if "_rounds@" in c or "_bits@" in c
+        )
+        _emit(
+            f"headtohead/{row['attack']}/{row['aggregator']}"
+            f"/alpha={row['alpha']:g}",
+            dt / max(len(h2h), 1) * 1e6 / 100,
+            eps_cols,
+        )
+    all_results["headtohead"] = h2h
 
     # ---- Table 1 (compression axis): exact bits on the wire ---------------
     t0 = time.time()

@@ -6,10 +6,13 @@ T_th=10, coordinate-wise trimmed mean — their settings).  Paper numbers:
 ByzantinePGD ≈ 198–212 rounds, ours ≈ 2–16 (w8a robust regression);
 non-Byzantine §6: 257 vs 7 ⇒ the 36× claim.
 
-Bits: every transmission routes through :mod:`repro.comm` channels, so
-each row reports the run's exact integer :class:`~repro.comm.WireLedger`
-totals per direction (m uplink payloads + one broadcast per round — no
-lossy float metric anywhere).  :func:`run_compression` sweeps
+Bits: every transmission — BOTH arms, Newton and PGD — routes through
+:mod:`repro.comm` channels, so each row reports each run's exact integer
+:class:`~repro.comm.WireLedger` totals per direction (m uplink payloads
++ one broadcast per round, PGD escape-probe rounds included — no
+hand-rolled ``rounds · m · 32 · d`` estimate and no lossy float metric
+anywhere; the PGD arm builds through ``ExperimentSpec(solver=
+"byzantine_pgd")``, the channel-routed :mod:`repro.solvers` loop).  :func:`run_compression` sweeps
 δ-approximate compressors on the same stopping criterion (top-k at
 k/d = 0.1 pays ~7.8× fewer uplink bits per round on w8a and must stay
 within 2× the uncompressed round count), optionally compressing the
@@ -31,8 +34,7 @@ import time
 
 import jax
 
-from repro.api import ExperimentSpec, problem_dim, to_attack_config
-from repro.core import ByzantinePGD, PGDConfig
+from repro.api import ExperimentSpec, problem_dim
 
 KERNEL_TIMING_DS = (1408, 16_384, 131_072, 1_000_000)
 
@@ -48,7 +50,6 @@ def _spec_name(spec):
 
 def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
         grad_tol=0.02, max_rounds=400, newton_budget=60, seed=0):
-    d = problem_dim(f"{dataset}-robust")
     m = 20  # the paper workloads partition over 20 machines
     rows = []
 
@@ -60,20 +61,18 @@ def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
             seed=seed,
         ).build()
         _, h_n = exp.run(newton_budget, grad_tol=grad_tol)
-        data, w0 = exp.problem, exp.problem.w0
-        pgd = ByzantinePGD(
-            exp.problem.loss_fn,
-            PGDConfig(lr=1.0, R=10, r=5.0, Q=10, T_th=10, trim_frac=max(alpha, 0.1)),
-            to_attack_config(attack, alpha),
-        )
-        _, h_p = pgd.run(
-            w0, data.X_workers, data.y_workers,
-            max_rounds=max_rounds, grad_tol=grad_tol,
-        )
-        # PGD ships one full-precision d-gradient per worker per round
-        # (uplink) and the iterate broadcast back (downlink)
-        pgd_up = h_p["rounds"] * m * 32 * d
-        pgd_down = h_p["rounds"] * 32 * d
+        # the PGD arm builds through the same facade (solver axis), so
+        # its wire cost is the run's own exact ledger — Yin et al.'s
+        # settings (R=10, r=5, Q=10, coordinate-wise trimmed mean)
+        pgd = ExperimentSpec(
+            problem=f"{dataset}-robust", eta=1.0,
+            solver="byzantine_pgd",
+            aggregator=f"trimmed_mean:{max(alpha, 0.1)!r}",
+            attack=attack, alpha=alpha, seed=seed,
+        ).build()
+        _, h_p = pgd.run(max_rounds, grad_tol=grad_tol)
+        pgd_up = h_p["uplink_bits"]
+        pgd_down = h_p["downlink_bits"]
         return {
             "attack": attack,
             "alpha": alpha,
@@ -89,6 +88,7 @@ def run(dataset="w8a", attacks=ATTACKS, alphas=(0.10, 0.15, 0.20),
             ),
             "pgd_uplink_bits": pgd_up,
             "pgd_downlink_bits": pgd_down,
+            "pgd_total_bits": h_p["total_bits"],
             "bits_speedup": pgd_up / max(h_n["uplink_bits"], 1),
         }
 

@@ -13,6 +13,10 @@ whole system together:
 * :mod:`repro.api.problems` — ``"w8a-robust"``,
   ``"synthetic-logistic:<n>:<d>"``, ``"matrix-factor:<d>:<r>"``, … →
   worker-sharded data + the canonical loss functions;
+* :mod:`repro.solvers` — the ``solver:`` axis (``"cubic_newton"``,
+  ``"byzantine_pgd[:R:Q]"``, ``"compressed_sgd[:radius:gtol]"``): the
+  first-order Byzantine baselines, channel-routed with exact ledger
+  billing (re-exported here as ``SOLVER_SPECS`` / ``parse_solver_spec``);
 * :mod:`repro.api.experiment` — :class:`ExperimentSpec`, the frozen
   JSON-round-trippable record every entry point builds through, with
   build-time validation (:class:`SpecError`) and a ``build()`` →
@@ -36,6 +40,7 @@ from .attacks import (
 )
 from .errors import SpecError
 from .experiment import Experiment, ExperimentSpec
+from ..solvers import SOLVER_SPECS, parse_solver_spec
 from .problems import (
     PROBLEM_SPECS,
     Problem,
@@ -57,6 +62,7 @@ __all__ = [
     "PROBLEM_SPECS",
     "Problem",
     "ResolvedAttack",
+    "SOLVER_SPECS",
     "SpecError",
     "accuracy",
     "default_aggregator_spec",
@@ -66,6 +72,7 @@ __all__ = [
     "make_aggregator",
     "make_attack",
     "make_problem",
+    "parse_solver_spec",
     "problem_dim",
     "resolve_attack",
     "robust_regression_loss",

@@ -24,8 +24,11 @@ runtime dispatches on name strings any more:
   solve (label attacks only).
 
 ``to_attack_config`` bridges to the legacy frozen
-:class:`~repro.core.newton.AttackConfig` for call sites that still pass
-one through (``ByzantinePGD``); ``resolve_attack`` goes the other way.
+:class:`~repro.core.newton.AttackConfig` for the Newton runtimes'
+constructors; ``resolve_attack`` goes the other way.  The first-order
+solvers (:mod:`repro.solvers`) take a :class:`ResolvedAttack` directly —
+since this PR there is no name-dispatch on the legacy ``core.attacks``
+tables left outside this module.
 """
 from __future__ import annotations
 
@@ -161,7 +164,9 @@ def resolve_attack(cfg) -> ResolvedAttack:
 
 def to_attack_config(spec, alpha: float = 0.0, *, num_classes: int = 2):
     """Spec string → legacy :class:`~repro.core.newton.AttackConfig`
-    (the form :class:`~repro.core.ByzantinePGD` still takes)."""
+    (the form the Newton runtimes' constructors take; the channel-routed
+    :class:`~repro.core.ByzantinePGD` shim accepts either form and
+    resolves it back through this registry)."""
     make_attack(spec, alpha, num_classes=num_classes)  # validate grammar
     from ..core.newton import AttackConfig  # runtime import: no cycle
 

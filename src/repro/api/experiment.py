@@ -50,6 +50,11 @@ _ASYNC_AXIS_DEFAULTS = {
     "staleness_decay": 0.5,
 }
 
+#: the default solver is likewise omitted from ``to_dict`` — every spec
+#: dict (and sweep-store hash) minted before the solver axis existed
+#: stays byte-identical, so pre-existing store entries remain addressable
+_SOLVER_DEFAULT = "cubic_newton"
+
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
@@ -73,6 +78,9 @@ class ExperimentSpec:
     grad_compressor: Optional[str] = None      # Remark-5 gradient round
     error_feedback: Optional[str] = None       # None → auto (see below)
     ef_damping: float = 0.75
+    # -- solver axis (repro.solvers spec string; see _SOLVER_DEFAULT) -----
+    solver: str = "cubic_newton"    # | "byzantine_pgd[:R:Q]"
+    #                                 | "compressed_sgd[:radius:gtol]"
     # -- resilience scenario ---------------------------------------------
     aggregator: str = "mean"        # repro.api.aggregators spec string
     attack: str = "none"            # repro.api.attacks spec string
@@ -89,11 +97,14 @@ class ExperimentSpec:
     # ------------------------------------------------------------ serde
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
-        # default-valued async axes are omitted: pre-async spec dicts
-        # (and their sweep-store hashes) stay byte-identical
+        # default-valued async axes (and the default solver) are omitted:
+        # pre-existing spec dicts (and their sweep-store hashes) stay
+        # byte-identical
         for key, default in _ASYNC_AXIS_DEFAULTS.items():
             if d[key] == default:
                 del d[key]
+        if d["solver"] == _SOLVER_DEFAULT:
+            del d["solver"]
         return d
 
     @classmethod
@@ -187,6 +198,34 @@ class ExperimentSpec:
                 f"m_workers={self.m_workers}: need ≥ 2 workers for "
                 f"aggregation to mean anything"
             )
+
+        # solver axis (grammar first — pure, no registries); the
+        # first-order baselines ship flat-vector gradient rounds, so they
+        # run on the paper runtime only, and the Newton-only axes are
+        # rejected rather than silently ignored
+        from ..solvers import FIRST_ORDER_SOLVERS, parse_solver_spec
+
+        solver_head, _ = parse_solver_spec(self.solver)
+        if solver_head in FIRST_ORDER_SOLVERS:
+            if self.runtime != "paper":
+                raise SpecError(
+                    f"solver {self.solver!r} is a first-order baseline "
+                    f"over flat-vector gradient rounds — it runs on "
+                    f"runtime='paper' only, got runtime={self.runtime!r}"
+                )
+            if self.exact_gradient:
+                raise SpecError(
+                    f"exact_gradient=True is the Newton Remark-5 two-"
+                    f"round mode; solver {self.solver!r} already ships "
+                    f"gradients every round — drop exact_gradient"
+                )
+            if solver_head == "byzantine_pgd" and self.momentum != 0.0:
+                raise SpecError(
+                    f"momentum={self.momentum!r}: ByzantinePGD [Yin et "
+                    f"al. 2019] has no momentum term — use "
+                    f"solver='compressed_sgd' for momentum-SGD, or drop "
+                    f"the momentum override"
+                )
         if not 0.0 <= self.alpha < 0.5:
             raise SpecError(
                 f"alpha={self.alpha!r}: the Byzantine fraction must lie in "
@@ -358,7 +397,16 @@ class Experiment:
     def __init__(self, spec: ExperimentSpec):
         self.spec = spec
         self.problem = make_problem(spec.problem, spec.m_workers, spec.seed)
-        if spec.runtime in ("paper", "async"):
+        if spec.solver != _SOLVER_DEFAULT:
+            from ..solvers import make_solver
+
+            # first-order solver on the paper runtime: same .algo duck
+            # type (run / bits_per_step / _ensure_channels) as the
+            # Newton runtimes, channels and registries included
+            self.config = None
+            self.algo = make_solver(spec, self.problem.loss_fn)
+            self.step = None
+        elif spec.runtime in ("paper", "async"):
             self.config = spec.to_newton_config()
             if spec.runtime == "async":
                 from ..async_rt import AsyncConfig, AsyncCubicNewton

@@ -13,11 +13,24 @@ fixed ``(m, d)`` stack.  :class:`StalenessWeighted` lifts ANY resolved
    geometrically (the standard staleness-aware FedAsync-style weighting;
    ``decay = 1.0`` recovers the unweighted rule over kept arrivals).
 
+Cohorts too small for the base rule to screen (n < 2) are NOT waved
+through unconditionally: under low ``participation`` a round where only
+a Byzantine packet lands would otherwise become the entire center update
+at full weight.  The wrapper therefore carries one screen statistic
+across rounds — the norm of the last aggregate produced by a *screened*
+(n ≥ 2, non-empty-keep) round — and rejects a lone arrival whose norm
+exceeds ``norm_guard`` times it.  Before any screened round has
+established a reference the lone arrival is accepted (there is genuinely
+nothing to screen against yet), preserving the degenerate bit-exactness
+with the synchronous runtimes.
+
 The wrapper is eager (host-driven, unjitted): the arrival count changes
 every round, and re-tracing a jitted aggregate per distinct count would
 compile once per cohort size for no measurable win at simulation scale.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -27,37 +40,52 @@ class StalenessWeighted:
 
     ``arrivals`` is ``(n, d)`` (n = this round's deliveries, any n ≥ 1),
     ``ages`` is ``(n,)`` integer rounds-in-flight.  ``keep`` is the base
-    rule's mask over the arrival stack (all-ones when n < 2 — a single
-    arrival is nothing to screen against).
+    rule's mask over the arrival stack; for n < 2 it is the norm-guard's
+    verdict against the last screened aggregate (see module docstring).
     """
 
-    def __init__(self, base, decay: float = 0.5):
+    def __init__(self, base, decay: float = 0.5, norm_guard: float = 3.0):
         if not 0.0 < float(decay) <= 1.0:
             raise ValueError(f"staleness decay must be in (0, 1], "
                              f"got {decay!r}")
+        if float(norm_guard) <= 0.0:
+            raise ValueError(f"norm_guard must be positive, "
+                             f"got {norm_guard!r}")
         self.base = base
         self.decay = float(decay)
+        self.norm_guard = float(norm_guard)
+        self._ref_norm: Optional[float] = None  # last screened ‖aggregate‖
         self.name = f"staleness_weighted({base.name})"
         self.spec = f"staleness_weighted:{self.decay}:{base.spec}"
 
     def __call__(self, arrivals, ages):
         n = arrivals.shape[0]
-        if n >= 2:
+        screened = n >= 2
+        if screened:
             _, keep = self.base(arrivals)
+        elif (self._ref_norm is not None
+              and float(jnp.linalg.norm(arrivals[0]))
+              > self.norm_guard * max(self._ref_norm, 1e-12)):
+            # lone arrival far outside the scale every screened round
+            # has produced — the single-Byzantine-packet round
+            keep = jnp.zeros((n,), jnp.float32)
         else:
             keep = jnp.ones((n,), jnp.float32)
         ages = jnp.asarray(ages, jnp.float32)
         wts = keep.astype(jnp.float32) * (self.decay ** ages)
         total = jnp.sum(wts)
-        # all-rejected stacks (a paranoid base rule on a tiny cohort)
-        # contribute nothing rather than NaN
+        # all-rejected stacks (a paranoid base rule on a tiny cohort, or
+        # a norm-guarded lone arrival) contribute nothing rather than NaN
         agg = jnp.where(
             total > 0,
             jnp.sum(wts[:, None] * arrivals, axis=0)
             / jnp.maximum(total, 1e-30),
             jnp.zeros(arrivals.shape[-1], arrivals.dtype),
         )
+        if screened and float(total) > 0:
+            self._ref_norm = float(jnp.linalg.norm(agg))
         return agg, keep
 
     def __repr__(self):
-        return f"StalenessWeighted({self.base!r}, decay={self.decay})"
+        return (f"StalenessWeighted({self.base!r}, decay={self.decay}, "
+                f"norm_guard={self.norm_guard})")

@@ -1,28 +1,26 @@
-"""ByzantinePGD [Yin et al., ICML 2019] — the baseline the paper beats.
+"""ByzantinePGD [Yin et al., ICML 2019] — compatibility shim.
 
-Perturbed robust gradient descent: every round each worker ships its local
-gradient; the center aggregates with a robust rule (coordinate-wise trimmed
-mean / median) and takes a GD step.  Whenever the aggregated gradient is
-small (a stationary point — true local minimum *or* saddle / fake minimum),
-the ``Escape`` sub-routine probes: up to ``R`` random perturbations in an
-r-ball, each followed by ``Q`` robust-GD rounds; if the function value drops
-by more than ``f_th`` the point was a saddle and the main loop resumes from
-the escaped iterate, otherwise it is declared (second-order) stationary.
+The real implementation moved to
+:class:`repro.solvers.pgd.ChannelByzantinePGD`: the loop now transmits
+every exchange (main rounds AND the R×Q Escape probe rounds) through the
+:class:`~repro.comm.VectorChannel` stack with exact
+:class:`~repro.comm.WireLedger` billing, and resolves its aggregator and
+attack from the :mod:`repro.api` registries — so a spec-named attack
+means the same thing here as in both Newton runtimes, closing the old
+gap where this class name-dispatched on the legacy ``core.attacks``
+config tables.
 
-Every worker→center exchange counts as one communication round — this is the
-quantity Table 1 compares (their experiment: R=10, r=5, Q=10, T_th=10,
-coordinate-wise trimmed mean).
+This module keeps the historical constructor/run surface
+(``ByzantinePGD(loss_fn, PGDConfig(...), AttackConfig(...))`` →
+``run(w0, X, y, max_rounds=, grad_tol=)`` → ``(w, hist)`` with
+``hist["rounds"]``, the Table-1 metric) for existing callers and tests.
+New code should go through the facade: ``ExperimentSpec(solver=
+"byzantine_pgd", ...)``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-
-from . import attacks as attacks_lib
-from .aggregation import coordinate_median, trimmed_mean
+from typing import Callable, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,115 +29,66 @@ class PGDConfig:
     R: int = 10           # escape attempts
     r: float = 5.0        # perturbation radius
     Q: int = 10           # GD rounds per escape attempt
-    T_th: int = 10        # patience between escape triggers
+    T_th: int = 10        # (kept for config compatibility; unused)
     f_th: float = 1e-3    # function-decrease threshold to accept an escape
     grad_th: float = 1e-4 # "gradient is small" trigger
-    aggregator: str = "trimmed_mean"  # or "coordinate_median"
+    aggregator: str = "trimmed_mean"  # legacy name or a registry spec
     trim_frac: float = 0.2
+    # channel axes (full-precision wire by default, like the legacy loop)
+    compressor: Optional[str] = None
+    downlink_compressor: Optional[str] = None
+    error_feedback: str = "none"
+    ef_damping: float = 0.75
+
+    def aggregator_spec(self) -> str:
+        """Map the legacy ``(aggregator, trim_frac)`` pair onto a
+        :mod:`repro.api.aggregators` registry spec string."""
+        if self.aggregator in ("trimmed_mean", "norm_trim"):
+            return f"{self.aggregator}:{self.trim_frac!r}"
+        return self.aggregator  # "coordinate_median", "mean", or a spec
 
 
 class ByzantinePGD:
+    """Thin adapter over :class:`repro.solvers.pgd.ChannelByzantinePGD`."""
+
     def __init__(
         self,
         loss_fn: Callable,
         config: PGDConfig = PGDConfig(),
-        attack: "attacks_lib.AttackConfig | None" = None,
+        attack=None,
     ):
-        from .newton import AttackConfig  # avoid cycle
+        from ..solvers.pgd import ChannelByzantinePGD, PGDParams
 
         self.loss_fn = loss_fn
         self.cfg = config
-        self.attack = attack if attack is not None else AttackConfig()
-        self._per_worker_grads = jax.jit(
-            jax.vmap(jax.grad(loss_fn), in_axes=(None, 0, 0))
+        self.attack = attack
+        self.solver = ChannelByzantinePGD(
+            loss_fn,
+            PGDParams(
+                lr=config.lr,
+                compressor=config.compressor,
+                downlink_compressor=config.downlink_compressor,
+                error_feedback=config.error_feedback,
+                ef_damping=config.ef_damping,
+                R=config.R, r=config.r, Q=config.Q,
+                f_th=config.f_th, grad_th=config.grad_th,
+            ),
+            aggregator=config.aggregator_spec(),
+            attack=attack,  # legacy AttackConfig → registry resolve_attack
         )
-        self._loss = jax.jit(loss_fn)
 
-    # ------------------------------------------------------------------
-    def _aggregate(self, grads):
-        if self.cfg.aggregator == "coordinate_median":
-            return coordinate_median(grads)
-        return trimmed_mean(grads, self.cfg.trim_frac)
+    @property
+    def ledger(self):
+        return self.solver.ledger
 
-    def _robust_grad(self, w, X, y, key):
-        """One communication round: workers send gradients, center aggregates."""
-        atk = self.attack
-        m = X.shape[0]
-        mask = attacks_lib.byzantine_mask(m, atk.alpha)
-        k_label, k_update = jax.random.split(key)
-        y_used = y
-        if atk.name in attacks_lib.LABEL_ATTACKS and atk.name != "none":
-            y_used = attacks_lib.LABEL_ATTACKS[atk.name](
-                k_label, y, mask, num_classes=atk.num_classes
-            )
-        g = self._per_worker_grads(w, X, y_used)
-        if atk.name in attacks_lib.UPDATE_ATTACKS and atk.name != "none":
-            kw = {}
-            if atk.name == "gaussian":
-                kw = {"sigma": atk.sigma}
-            elif atk.name == "negative":
-                kw = {"c": atk.c}
-            g = attacks_lib.UPDATE_ATTACKS[atk.name](k_update, g, mask, **kw)
-        return self._aggregate(g)
-
-    # ------------------------------------------------------------------
     def run(self, w0, X, y, max_rounds: int = 2000, grad_tol: float = 1e-3,
             key=None, full_data=None):
-        """Run until pooled ‖∇f‖ ≤ grad_tol (same stopping rule as the
-        paper's §6 comparison) or the round budget is exhausted.
-
-        Returns (w, history) where history['rounds'] is the number of
-        worker↔center communication rounds consumed — the Table-1 metric.
-        """
-        cfg = self.cfg
-        key = key if key is not None else jax.random.PRNGKey(0)
-        if full_data is None:
-            full_data = (X.reshape(-1, X.shape[-1]), y.reshape(-1))
-        Xf, yf = full_data
-        gradf = jax.jit(jax.grad(self.loss_fn))
-
-        w = w0
-        rounds = 0
-        hist = {"loss": [], "grad_norm": [], "rounds": 0}
-
-        def record(w):
-            hist["loss"].append(float(self._loss(w, Xf, yf)))
-            hist["grad_norm"].append(float(jnp.linalg.norm(gradf(w, Xf, yf))))
-
-        while rounds < max_rounds:
-            key, sub = jax.random.split(key)
-            g = self._robust_grad(w, X, y, sub)
-            rounds += 1
-            w = w - cfg.lr * g
-            record(w)
-            if hist["grad_norm"][-1] <= grad_tol:
-                # Candidate stationary point: run Escape to certify it is not
-                # a saddle / fake local minimum.
-                escaped, w, used = self._escape(w, X, y, key)
-                rounds += used
-                if not escaped:
-                    break  # certified: no descent found in R perturbations
-        hist["rounds"] = rounds
-        return w, hist
-
-    def _escape(self, w, X, y, key):
-        """The Escape sub-routine.  Returns (escaped?, iterate, rounds_used)."""
-        cfg = self.cfg
-        f0 = float(self._loss(w, X.reshape(-1, X.shape[-1]), y.reshape(-1)))
-        used = 0
-        for _ in range(cfg.R):
-            key, kp, kg = jax.random.split(key, 3)
-            u = jax.random.normal(kp, w.shape)
-            u = u / (jnp.linalg.norm(u) + 1e-12) * cfg.r * jax.random.uniform(kp)
-            w_try = w + u
-            for _q in range(cfg.Q):
-                kg, sub = jax.random.split(kg)
-                g = self._robust_grad(w_try, X, y, sub)
-                used += 1
-                w_try = w_try - cfg.lr * g
-            f_try = float(
-                self._loss(w_try, X.reshape(-1, X.shape[-1]), y.reshape(-1))
-            )
-            if f0 - f_try > cfg.f_th:
-                return True, w_try, used  # decreased ⇒ was a saddle, escaped
-        return False, w, used
+        """Run until Escape certifies a second-order stationary point or
+        the round budget is exhausted (probe rounds count).  Returns
+        ``(w, history)``; ``history["rounds"]`` is the exact number of
+        worker↔center communication rounds consumed, and the wire-bit
+        totals are the ledger's exact ints."""
+        return self.solver.run(
+            w0, X, y, n_steps=max_rounds, key=key,
+            grad_tol=grad_tol, full_data=full_data,
+        )

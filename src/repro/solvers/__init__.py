@@ -1,0 +1,179 @@
+"""`repro.solvers` — first-order baselines behind the `solver:` spec axis.
+
+The paper's headline claim is ~25% better iteration complexity than
+first-order methods; this package supplies the first-order side of that
+comparison as alternate solvers every :class:`~repro.api.ExperimentSpec`
+can select next to ``aggregator:`` / ``attack:``:
+
+    "cubic_newton"                 Algorithm 1 (the default; lives in
+                                   repro.core.newton — not here)
+    "byzantine_pgd[:<R>:<Q>]"      perturbed robust gradient descent
+                                   [Yin et al., ICML 2019] with the
+                                   Escape sub-routine (R probe
+                                   perturbations × Q robust-GD rounds)
+    "compressed_sgd[:<radius>:<gtol>]"
+                                   compressed Byzantine-resilient SGD
+                                   (Chen/Li/Chi 2023, arXiv 2310.19059):
+                                   δ-compressed gradient rounds with
+                                   EF21, optional isotropic perturbation
+                                   of radius ``radius`` whenever
+                                   ‖aggregate‖ ≤ ``gtol`` (saddle
+                                   escape; off at the default radius 0)
+
+Both solvers transmit **exclusively** through the same
+:class:`repro.comm.VectorChannel` stack as the Newton runtimes — m
+uplink gradient payloads (δ-compressed, EF/EF21 state, the Byzantine
+injection hook) plus one downlink broadcast per communication round,
+every exchange billed at send time on a :class:`repro.comm.WireLedger`
+(escape-probe rounds included) — resolve their aggregator and attack
+from the :mod:`repro.api` registries, and emit the same history schema
+and per-round :class:`~repro.telemetry.RoundRecord`s, so the sweep /
+report pivots work unchanged across the solver axis.
+
+Degenerate-parity contracts (pinned in ``tests/test_solvers.py``):
+
+* ``compressed_sgd`` with ``compressor=None``, ``aggregator="mean"``,
+  α = 0 is **bit-exact** with the plain robust-SGD reference loop
+  ``w ← w − η·mean_i ∇f_i(w)``;
+* ``byzantine_pgd`` through the facade reproduces the legacy
+  ``repro.core.ByzantinePGD`` loop's round count (the legacy class is
+  now a thin shim over :class:`ChannelByzantinePGD`).
+"""
+from __future__ import annotations
+
+from ..api.errors import SpecError
+
+SOLVER_SPECS = ("cubic_newton", "byzantine_pgd[:<R>:<Q>]",
+                "compressed_sgd[:<radius>:<gtol>]")
+
+#: solver heads that ship first-order gradient rounds (paper runtime only)
+FIRST_ORDER_SOLVERS = ("byzantine_pgd", "compressed_sgd")
+
+
+def parse_solver_spec(spec) -> tuple:
+    """Validate a ``solver`` spec string → ``(head, params dict)``.
+
+    Pure grammar — no registry objects are built here, so
+    :meth:`ExperimentSpec.validate` can call it without touching JAX.
+    Raises :class:`~repro.api.errors.SpecError` on unknown heads, wrong
+    arity, or non-numeric / out-of-range parameters.
+    """
+    if spec is None:
+        spec = "cubic_newton"
+    if not isinstance(spec, str):
+        raise SpecError(f"solver spec must be a string, got {spec!r}")
+    head, _, rest = spec.partition(":")
+    args = rest.split(":") if rest else []
+    if head == "cubic_newton":
+        if args:
+            raise SpecError(
+                f"solver 'cubic_newton' takes no parameters, got {spec!r}"
+            )
+        return head, {}
+    if head == "byzantine_pgd":
+        if len(args) not in (0, 2):
+            raise SpecError(
+                f"solver spec {spec!r}: expected 'byzantine_pgd' or "
+                f"'byzantine_pgd:<R>:<Q>' (escape attempts × GD rounds "
+                f"per attempt)"
+            )
+        try:
+            R = int(args[0]) if args else 10
+            Q = int(args[1]) if args else 10
+        except ValueError:
+            raise SpecError(
+                f"solver spec {spec!r}: R and Q must be integers"
+            ) from None
+        if R < 0 or Q < 1:
+            raise SpecError(
+                f"solver spec {spec!r}: need R ≥ 0 escape attempts and "
+                f"Q ≥ 1 GD rounds per attempt"
+            )
+        return head, {"R": R, "Q": Q}
+    if head == "compressed_sgd":
+        if len(args) not in (0, 2):
+            raise SpecError(
+                f"solver spec {spec!r}: expected 'compressed_sgd' or "
+                f"'compressed_sgd:<radius>:<gtol>' (perturbation radius "
+                f"and its ‖aggregate‖ trigger)"
+            )
+        try:
+            radius = float(args[0]) if args else 0.0
+            gtol = float(args[1]) if args else 0.0
+        except ValueError:
+            raise SpecError(
+                f"solver spec {spec!r}: radius and gtol must be numbers"
+            ) from None
+        if radius < 0 or gtol < 0:
+            raise SpecError(
+                f"solver spec {spec!r}: radius and gtol must be ≥ 0"
+            )
+        return head, {"perturb_radius": radius, "perturb_gtol": gtol}
+    raise SpecError(
+        f"unknown solver spec {spec!r}; expected one of {SOLVER_SPECS}"
+    )
+
+
+def make_solver(spec, loss_fn):
+    """Validated :class:`~repro.api.ExperimentSpec` + loss → a built
+    first-order solver (the ``Experiment.algo`` for non-Newton specs).
+
+    Channel wiring mirrors :meth:`ExperimentSpec.to_newton_config`: the
+    uplink takes ``spec.compressor`` with the resolved error feedback
+    and the attack registry's injection hook, the downlink broadcast
+    takes ``spec.downlink_compressor``, and ``eta`` is the step size.
+    """
+    from ..api.attacks import make_attack
+    from .pgd import ChannelByzantinePGD, PGDParams
+    from .sgd import CompressedSGD, SGDParams
+
+    head, params = parse_solver_spec(spec.solver)
+    attack = make_attack(spec.attack, spec.alpha,
+                         num_classes=spec.num_classes)
+    common = dict(
+        lr=spec.eta,
+        compressor=spec.compressor,
+        downlink_compressor=spec.downlink_compressor,
+        error_feedback=spec.resolved_error_feedback(),
+        ef_damping=spec.ef_damping,
+    )
+    if head == "byzantine_pgd":
+        return ChannelByzantinePGD(
+            loss_fn, PGDParams(**common, **params),
+            aggregator=spec.aggregator, attack=attack, seed=spec.seed,
+        )
+    if head == "compressed_sgd":
+        return CompressedSGD(
+            loss_fn, SGDParams(**common, momentum=spec.momentum, **params),
+            aggregator=spec.aggregator, attack=attack, seed=spec.seed,
+        )
+    raise SpecError(
+        f"solver {spec.solver!r} is not a repro.solvers solver "
+        f"(cubic_newton builds through repro.core.newton)"
+    )
+
+
+def __getattr__(name):
+    # heavy solver classes resolve lazily so `parse_solver_spec` stays
+    # importable without pulling JAX into spec validation
+    if name in ("ChannelByzantinePGD", "PGDParams"):
+        from . import pgd
+
+        return getattr(pgd, name)
+    if name in ("CompressedSGD", "SGDParams"):
+        from . import sgd
+
+        return getattr(sgd, name)
+    raise AttributeError(name)
+
+
+__all__ = [
+    "FIRST_ORDER_SOLVERS",
+    "SOLVER_SPECS",
+    "ChannelByzantinePGD",
+    "CompressedSGD",
+    "PGDParams",
+    "SGDParams",
+    "make_solver",
+    "parse_solver_spec",
+]

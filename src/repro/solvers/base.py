@@ -1,0 +1,202 @@
+"""Shared channel/ledger plumbing for the first-order solvers.
+
+:class:`FirstOrderSolver` owns exactly what
+:class:`~repro.core.newton.DistributedCubicNewton` owns — and nothing it
+doesn't: the uplink/downlink :class:`~repro.comm.VectorChannel` pair
+(resolved ONCE per observed ``(d, m)``, never inside a trace), the
+registry-resolved aggregator and :class:`~repro.api.ResolvedAttack`, the
+host-side exact-int :class:`~repro.comm.WireLedger`, the adaptive-k
+schedule hook, and the common history bookkeeping.  Subclasses implement
+one jitted communication round plus their host loop.
+
+One **communication round** is always m uplink gradient payloads + one
+downlink broadcast of the model step — `bits_per_step()` is the same
+static-int introspection the Newton runtimes expose, and every executed
+round (main loop *and* escape probes) is billed on the ledger at send
+time, so the history's ledger snapshot is exact by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from ..comm import VectorChannel, WireLedger
+from ..compression import AdaptiveTopK
+from ..telemetry import (
+    RoundRecord,
+    compile_scope,
+    get_telemetry,
+    record_retrace,
+    rejected_from_keep,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FirstOrderParams:
+    """Channel + step-size parameters shared by both first-order solvers
+    (the fields :func:`repro.solvers.make_solver` maps off an
+    :class:`~repro.api.ExperimentSpec`)."""
+
+    lr: float = 1.0                            # spec.eta
+    compressor: Optional[str] = None           # uplink gradient payloads
+    downlink_compressor: Optional[str] = None  # center→worker broadcast
+    error_feedback: str = "none"               # "none" | "ef" | "ef21"
+    ef_damping: float = 0.75
+
+
+class FirstOrderSolver:
+    """Channel-routed robust first-order loop (template for PGD / SGD).
+
+    ``loss_fn(w, X, y) -> scalar`` with worker-stacked data ``X: (m, n,
+    d)``, ``y: (m, n)`` — the paper runtime's layout.  ``aggregator`` is
+    a :mod:`repro.api.aggregators` spec string (or resolved Aggregator);
+    ``attack`` a :class:`~repro.api.ResolvedAttack` (or a legacy
+    :class:`~repro.core.newton.AttackConfig`).
+    """
+
+    runtime_label = "first_order"
+    rounds_per_step = 1
+
+    def __init__(self, loss_fn: Callable, params: FirstOrderParams,
+                 aggregator="mean", attack=None, seed: int = 0):
+        from ..api.aggregators import make_aggregator
+        from ..api.attacks import make_attack, resolve_attack
+
+        self.loss_fn = loss_fn
+        self.params = params
+        self.seed = int(seed)
+        self.aggregator = make_aggregator(aggregator)
+        if attack is None or isinstance(attack, str):
+            self._attack_rule = make_attack(attack or "none", 0.0)
+        elif hasattr(attack, "update_hook"):
+            self._attack_rule = attack          # already resolved
+        else:
+            self._attack_rule = resolve_attack(attack)  # legacy config
+        self._grad_fn = jax.grad(loss_fn)
+        self._per_worker_grads = jax.vmap(self._grad_fn,
+                                          in_axes=(None, 0, 0))
+        self.ledger = WireLedger()
+        self._dims: Optional[tuple] = None
+        self.uplink: Optional[VectorChannel] = None
+        self.downlink: Optional[VectorChannel] = None
+        self._rebuild_jit()
+
+    # -- channels (once per (d, m), never per trace) --------------------
+    def _rebuild_jit(self):
+        """(Re)trace the jitted round — needed at channel (re)build and
+        whenever an adaptive compressor's static k moves."""
+        if self._dims is not None:
+            record_retrace(
+                f"{self.runtime_label}.round.rebuild",
+                **{f"k_{name}": ch.compressor.k
+                   for name, ch in self.channels.items()
+                   if isinstance(ch.compressor, AdaptiveTopK)},
+            )
+        self._round = jax.jit(self._round_impl)
+
+    def _ensure_channels(self, d: int, m: int):
+        if self._dims == (d, m):
+            return
+        p = self.params
+        self.uplink = VectorChannel(
+            "uplink", p.compressor, d, m,
+            error_feedback=p.error_feedback, damping=p.ef_damping,
+            attack_hook=self._attack_rule.update_hook(m),
+        )
+        self.downlink = VectorChannel(
+            "downlink", p.downlink_compressor, d, 1,
+            error_feedback=p.error_feedback, damping=p.ef_damping,
+        )
+        if self._dims is not None:
+            self._rebuild_jit()   # stale trace would bake old channels in
+        self._dims = (d, m)
+
+    @property
+    def channels(self):
+        return {"uplink": self.uplink, "downlink": self.downlink}
+
+    def init_comm_state(self):
+        """Fresh channel-state pytree (per-worker EF memories)."""
+        return {"uplink": self.uplink.init_state(),
+                "downlink": self.downlink.init_state()}
+
+    # -- wire accounting ------------------------------------------------
+    def bits_per_step(self) -> dict:
+        """Exact bits ONE communication round costs per direction
+        (static Python ints; channels must exist)."""
+        return {"uplink": self.uplink.bits_per_round(),
+                "downlink": self.downlink.bits_per_round()}
+
+    def _bill_round(self, label: str = "round") -> dict:
+        """Bill one executed round on the ledger at send time (re-read
+        per round: an adaptive uplink moves k between rounds)."""
+        bps = self.bits_per_step()
+        self.ledger.record(uplink=bps["uplink"], downlink=bps["downlink"],
+                           rounds=1, label=label)
+        return bps
+
+    # -- adaptive-k (same schedule hook as the Newton runtimes) ---------
+    def _maybe_adapt(self, grad_norm: float,
+                     measured_delta: Optional[float] = None) -> bool:
+        changed = False
+        for name, ch in self.channels.items():
+            comp = ch.compressor
+            if isinstance(comp, AdaptiveTopK):
+                changed |= comp.schedule_update(
+                    grad_norm=grad_norm,
+                    measured_delta=(measured_delta
+                                    if name == "uplink" else None),
+                )
+        if changed:
+            self._rebuild_jit()
+        return changed
+
+    def _uplink_k(self) -> Optional[int]:
+        comp = self.uplink.compressor if self.uplink is not None else None
+        return comp.k if isinstance(comp, AdaptiveTopK) else None
+
+    # -- the one jitted communication round (subclass) ------------------
+    def _round_impl(self, *args):
+        raise NotImplementedError
+
+    # -- history bookkeeping (one schema across all solvers) ------------
+    @staticmethod
+    def _fresh_hist() -> dict:
+        return {"loss": [], "grad_norm": [], "eval": [], "rounds": 0,
+                "bits_cumulative": [], "uplink_delta": [],
+                "k_trajectory": [], "saddle_escape_step": None,
+                "truncated": False}
+
+    def _emit_round(self, tel, *, step, loss, gn, prev_loss, delta_hat,
+                    k_live, k_changed, escaped, keep, bps):
+        if not tel.enabled:
+            return
+        tel.round(RoundRecord(
+            step=step, runtime=self.runtime_label, loss=loss, grad_norm=gn,
+            model_decrease=(None if prev_loss is None else prev_loss - loss),
+            uplink_delta=delta_hat, k=k_live, k_changed=k_changed,
+            saddle_escape=escaped,
+            rejected=rejected_from_keep(keep),
+            attack=self._attack_rule.spec,
+            alpha=self._attack_rule.alpha,
+            wire_uplink_bits=bps["uplink"],
+            wire_downlink_bits=bps["downlink"],
+        ), name=f"{self.runtime_label}.round")
+
+    def _jit_round(self, *args):
+        """Run the jitted round under the compile-attribution scope."""
+        with compile_scope(f"{self.runtime_label}.round"):
+            return self._round(*args)
+
+    # convenience the run loops share
+    def _pooled_fns(self, X, y, full_data):
+        if full_data is None:
+            full_data = (X.reshape(-1, X.shape[-1]), y.reshape(-1))
+        Xf, yf = full_data
+        return Xf, yf, jax.jit(self._grad_fn), jax.jit(self.loss_fn)
+
+    @staticmethod
+    def _telemetry():
+        return get_telemetry()

@@ -1,0 +1,184 @@
+"""ByzantinePGD [Yin et al., ICML 2019] routed through the channel stack.
+
+Perturbed robust gradient descent — the first-order baseline the paper's
+Table 1 beats.  Every round each worker ships its local gradient through
+the **uplink** :class:`~repro.comm.VectorChannel` (δ-compressed, EF/EF21
+state, the registry attack's injection hook); the center aggregates with
+a :mod:`repro.api.aggregators` rule and broadcasts the GD step through
+the **downlink** channel.  Whenever the pooled gradient is small the
+``Escape`` sub-routine probes: up to ``R`` random perturbations in an
+r-ball, each followed by up to ``Q`` robust-GD rounds — every probe
+round is a full communication round, transmitted through the same
+channels and billed on the :class:`~repro.comm.WireLedger` at send time
+(the exact-int wire cost Table 1 now reads instead of the old
+``rounds · m · 32 · d`` estimate).
+
+Differences from the legacy ``repro.core.byzantine_pgd`` loop (which is
+now a shim over this class):
+
+* attacks/aggregators come from the api registries, so a spec-named
+  attack (``"gaussian:10.0"``, ``"saddle:5.0"``) means the same thing
+  here as in both Newton runtimes;
+* the Escape budget is capped at the remaining round budget, so
+  ``hist["rounds"] ≤ n_steps`` always (the legacy loop could overshoot
+  its ``max_rounds`` by up to R·Q probe rounds);
+* escape state (channel EF memories) reverts with the iterate when an
+  attempt is rejected — the bits stay billed (they crossed the wire),
+  but the center's belief doesn't advance on a rejected probe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import FirstOrderParams, FirstOrderSolver
+
+
+@dataclasses.dataclass(frozen=True)
+class PGDParams(FirstOrderParams):
+    """Yin et al.'s experiment defaults: R=10, r=5, Q=10."""
+
+    R: int = 10            # escape attempts
+    r: float = 5.0         # perturbation radius
+    Q: int = 10            # robust-GD rounds per escape attempt
+    f_th: float = 1e-3     # function-decrease threshold to accept an escape
+    grad_th: float = 1e-4  # "gradient is small" escape trigger (fallback
+    #                        when the caller passes no grad_tol)
+
+
+class ChannelByzantinePGD(FirstOrderSolver):
+    """Channel-routed perturbed robust gradient descent."""
+
+    runtime_label = "pgd"
+
+    # -- one jitted communication round ---------------------------------
+    def _round_impl(self, w, state, X, y, key):
+        p = self.params
+        k_label, k_update, k_comp, k_down = jax.random.split(key, 4)
+        new_state = dict(state)
+
+        # data-level attacks corrupt Byzantine workers' labels before the
+        # local gradient; update-level attacks corrupt the reconstructed
+        # uplink payloads inside the channel (same order as the Newton
+        # step, so one spec means one attack across the solver axis)
+        y_used = self._attack_rule.corrupt_labels(k_label, y)
+        g = self._per_worker_grads(w, X, y_used)
+        g, new_state["uplink"], delta = self.uplink.transmit(
+            g, state["uplink"], key=k_comp, attack_key=k_update,
+            measure=True,
+        )
+        agg, keep = self.aggregator(g)
+        step, new_state["downlink"] = self.downlink.transmit(
+            -p.lr * agg, state["downlink"], key=k_down
+        )
+        return w + step, new_state, {
+            "keep": keep, "uplink_delta": delta,
+            "agg_norm": jnp.linalg.norm(agg),
+        }
+
+    # -- the Escape sub-routine -----------------------------------------
+    def _escape(self, w, state, X, y, key, budget, lossf, Xf, yf, f0):
+        """Probe up to R perturbations × Q robust-GD rounds within
+        ``budget`` remaining communication rounds.  Returns
+        ``(escaped?, w, state, rounds_used)`` — iterate AND channel
+        state revert on a rejected attempt (billed bits stay billed)."""
+        p = self.params
+        used = 0
+        for _ in range(p.R):
+            if used >= budget:
+                break
+            key, kp, kg = jax.random.split(key, 3)
+            u = jax.random.normal(kp, w.shape)
+            u = (u / (jnp.linalg.norm(u) + 1e-12)
+                 * p.r * jax.random.uniform(kp))
+            w_try, st_try = w + u, state
+            for _q in range(p.Q):
+                if used >= budget:
+                    break
+                kg, sub = jax.random.split(kg)
+                w_try, st_try, _ = self._jit_round(w_try, st_try, X, y, sub)
+                self._bill_round(label="escape")
+                used += 1
+            f_try = float(lossf(w_try, Xf, yf))
+            if f0 - f_try > p.f_th:
+                return True, w_try, st_try, used  # decreased ⇒ was a saddle
+        return False, w, state, used
+
+    # -- host loop -------------------------------------------------------
+    def run(self, w0, X, y, n_steps, key=None, eval_fn=None,
+            grad_tol=None, full_data=None, deadline=None,
+            saddle_value=None):
+        """Run robust PGD for at most ``n_steps`` communication rounds
+        (main-loop AND escape-probe rounds both count — the Table-1
+        metric), stopping early only when Escape certifies a
+        second-order stationary point.  Same signature and history
+        schema as :meth:`DistributedCubicNewton.run`; the small-gradient
+        escape trigger is ``grad_tol`` when given, else
+        ``params.grad_th``."""
+        import time as _time
+
+        key = key if key is not None else jax.random.PRNGKey(self.seed)
+        Xf, yf, gradf, lossf = self._pooled_fns(X, y, full_data)
+        self._ensure_channels(w0.shape[0], X.shape[0])
+        ledger = self.ledger
+        ledger.reset()
+        hist = self._fresh_hist()
+        hist["escape_rounds"] = 0
+        tel = self._telemetry()
+        prev_loss = float(lossf(w0, Xf, yf)) if tel.enabled else None
+        trigger = grad_tol if grad_tol is not None else self.params.grad_th
+
+        w = w0
+        state = self.init_comm_state()
+        t = 0
+        while ledger.rounds < n_steps:
+            if deadline is not None and hist["loss"] \
+                    and _time.monotonic() >= deadline:
+                hist["truncated"] = True
+                if tel.enabled:
+                    tel.event("pgd.truncated", step=t)
+                break
+            key, sub = jax.random.split(key)
+            k_live = self._uplink_k()
+            w, state, info = self._jit_round(w, state, X, y, sub)
+            bps = self._bill_round()
+            hist["bits_cumulative"].append(ledger.total_bits)
+            delta_hat = float(info["uplink_delta"])
+            hist["uplink_delta"].append(delta_hat)
+            hist["k_trajectory"].append(k_live)
+            gn = float(jnp.linalg.norm(gradf(w, Xf, yf)))
+            loss = float(lossf(w, Xf, yf))
+            hist["loss"].append(loss)
+            hist["grad_norm"].append(gn)
+            if eval_fn is not None:
+                hist["eval"].append(float(eval_fn(w)))
+            escaped_saddle = (saddle_value is not None
+                              and hist["saddle_escape_step"] is None
+                              and loss < saddle_value)
+            if escaped_saddle:
+                hist["saddle_escape_step"] = t
+            k_changed = self._maybe_adapt(gn, measured_delta=delta_hat)
+            self._emit_round(tel, step=t, loss=loss, gn=gn,
+                             prev_loss=prev_loss, delta_hat=delta_hat,
+                             k_live=k_live, k_changed=k_changed,
+                             escaped=escaped_saddle, keep=info["keep"],
+                             bps=bps)
+            prev_loss = loss
+            t += 1
+            if gn <= trigger:
+                # candidate stationary point: certify it is not a saddle
+                key, esc = jax.random.split(key)
+                escaped, w, state, used = self._escape(
+                    w, state, X, y, esc, n_steps - ledger.rounds,
+                    lossf, Xf, yf, loss,
+                )
+                hist["escape_rounds"] += used
+                if tel.enabled:
+                    tel.event("pgd.escape", step=t, escaped=escaped,
+                              probe_rounds=used)
+                if not escaped:
+                    break  # certified: no descent in R perturbations
+        hist.update(ledger.snapshot())
+        return w, hist

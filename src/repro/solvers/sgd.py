@@ -1,0 +1,134 @@
+"""Compressed Byzantine-resilient SGD (Chen/Li/Chi 2023, arXiv 2310.19059).
+
+The second first-order baseline: plain robust (momentum-)SGD whose
+gradient rounds ride the δ-compressed uplink with EF21 error feedback —
+the regime of "Byzantine-robust decentralized learning with compression"
+— plus the optional saddle-escape device of the perturbed variant: when
+the aggregated gradient's norm falls to ``perturb_gtol`` the center adds
+an isotropic perturbation of radius ``perturb_radius`` to the broadcast
+step.  Unlike ByzantinePGD's Escape there are no probe rounds: the
+perturbation piggybacks on the normal downlink broadcast, so every
+communication round costs exactly ``bits_per_step()`` and rounds-to-ε
+vs bits-to-ε tell the whole story.
+
+Degenerate-parity contract (pinned in ``tests/test_solvers.py``): with
+``compressor=None``, aggregator ``"mean"``, α = 0, momentum = 0, and the
+default ``perturb_radius = 0``, one round is **bit-exact** with the
+plain-SGD reference ``w ← w − η·mean_i ∇f_i(w)`` — the perturbation and
+momentum terms are gated by *static* Python branches, so the degenerate
+round compiles to the identical HLO, not to an ``x + 0`` approximation
+of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import FirstOrderParams, FirstOrderSolver
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDParams(FirstOrderParams):
+    momentum: float = 0.0
+    perturb_radius: float = 0.0  # 0 ⇒ no saddle-escape perturbation
+    perturb_gtol: float = 0.0    # ‖aggregate‖ level that arms it
+
+
+class CompressedSGD(FirstOrderSolver):
+    """Channel-routed robust SGD with optional isotropic perturbation."""
+
+    runtime_label = "sgd"
+
+    # -- one jitted communication round ---------------------------------
+    def _round_impl(self, w, v, state, X, y, key):
+        p = self.params
+        k_label, k_update, k_comp, k_down, k_perturb = \
+            jax.random.split(key, 5)
+        new_state = dict(state)
+
+        y_used = self._attack_rule.corrupt_labels(k_label, y)
+        g = self._per_worker_grads(w, X, y_used)
+        g, new_state["uplink"], delta = self.uplink.transmit(
+            g, state["uplink"], key=k_comp, attack_key=k_update,
+            measure=True,
+        )
+        agg, keep = self.aggregator(g)
+        # static gates: the degenerate round must be the reference HLO,
+        # not a `+ 0.0 * noise` perturbation of it
+        v_new = agg if p.momentum == 0.0 else p.momentum * v + agg
+        step = -p.lr * v_new
+        if p.perturb_radius > 0.0:
+            u = jax.random.normal(k_perturb, w.shape)
+            u = (u / (jnp.linalg.norm(u) + 1e-12) * p.perturb_radius
+                 * jax.random.uniform(k_perturb))
+            armed = (jnp.linalg.norm(agg) <= p.perturb_gtol)
+            step = step + jnp.where(armed, 1.0, 0.0) * u
+        step, new_state["downlink"] = self.downlink.transmit(
+            step, state["downlink"], key=k_down
+        )
+        return w + step, v_new, new_state, {
+            "keep": keep, "uplink_delta": delta,
+        }
+
+    # -- host loop -------------------------------------------------------
+    def run(self, w0, X, y, n_steps, key=None, eval_fn=None,
+            grad_tol=None, full_data=None, deadline=None,
+            saddle_value=None):
+        """Run compressed robust SGD for ``n_steps`` rounds (or until the
+        pooled ‖∇f‖ ≤ grad_tol).  Same signature and history schema as
+        :meth:`DistributedCubicNewton.run`."""
+        import time as _time
+
+        key = key if key is not None else jax.random.PRNGKey(self.seed)
+        Xf, yf, gradf, lossf = self._pooled_fns(X, y, full_data)
+        self._ensure_channels(w0.shape[0], X.shape[0])
+        ledger = self.ledger
+        ledger.reset()
+        hist = self._fresh_hist()
+        tel = self._telemetry()
+        prev_loss = float(lossf(w0, Xf, yf)) if tel.enabled else None
+
+        w = w0
+        v = jnp.zeros_like(w0)
+        state = self.init_comm_state()
+        for t in range(n_steps):
+            if deadline is not None and hist["loss"] \
+                    and _time.monotonic() >= deadline:
+                hist["truncated"] = True
+                if tel.enabled:
+                    tel.event("sgd.truncated", step=t)
+                break
+            key, sub = jax.random.split(key)
+            k_live = self._uplink_k()
+            w, v, state, info = self._jit_round(w, v, state, X, y, sub)
+            bps = self._bill_round()
+            hist["bits_cumulative"].append(ledger.total_bits)
+            delta_hat = float(info["uplink_delta"])
+            hist["uplink_delta"].append(delta_hat)
+            hist["k_trajectory"].append(k_live)
+            gn = float(jnp.linalg.norm(gradf(w, Xf, yf)))
+            loss = float(lossf(w, Xf, yf))
+            hist["loss"].append(loss)
+            hist["grad_norm"].append(gn)
+            if eval_fn is not None:
+                hist["eval"].append(float(eval_fn(w)))
+            hit_tol = grad_tol is not None and gn <= grad_tol
+            k_changed = False
+            if not hit_tol:
+                k_changed = self._maybe_adapt(gn, measured_delta=delta_hat)
+            escaped = (saddle_value is not None
+                       and hist["saddle_escape_step"] is None
+                       and loss < saddle_value)
+            if escaped:
+                hist["saddle_escape_step"] = t
+            self._emit_round(tel, step=t, loss=loss, gn=gn,
+                             prev_loss=prev_loss, delta_hat=delta_hat,
+                             k_live=k_live, k_changed=k_changed,
+                             escaped=escaped, keep=info["keep"], bps=bps)
+            prev_loss = loss
+            if hit_tol:
+                break
+        hist.update(ledger.snapshot())
+        return w, hist

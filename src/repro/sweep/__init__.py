@@ -19,10 +19,18 @@ from .grid import (
     paper_strengths,
     plan_grid,
 )
-from .grids import PRESETS, fig3_grid, fig12_grid, fig12_full_grid, smoke_grid
+from .grids import (
+    PRESETS,
+    fig3_grid,
+    fig12_grid,
+    fig12_full_grid,
+    headtohead_grid,
+    smoke_grid,
+)
 from .report import (
     bits_to_eps,
     eps_table,
+    headtohead_table,
     render_table,
     report,
     resilience_table,
@@ -44,6 +52,8 @@ __all__ = [
     "fig3_grid",
     "fig12_full_grid",
     "fig12_grid",
+    "headtohead_grid",
+    "headtohead_table",
     "merge",
     "paper_strengths",
     "plan_grid",

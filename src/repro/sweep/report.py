@@ -1,6 +1,6 @@
 """Summarizer: pivot a result store into the paper's tables.
 
-Four pivots, each a pure function of the store's ``"ok"`` records:
+Five pivots, each a pure function of the store's ``"ok"`` records:
 
 * :func:`resilience_table` — the attack × aggregator frontier (Figs. 1-2
   / the byzantine_attacks example table): final loss (or final test
@@ -11,6 +11,10 @@ Four pivots, each a pure function of the store's ``"ok"`` records:
 * :func:`bits_to_eps` — exact cumulative wire bits until ‖∇f‖ ≤ ε (the
   communication-efficiency axis), straight off the ledger ints stored
   with every record;
+* :func:`headtohead_table` — second-order vs first-order per (problem,
+  attack, aggregator, α) on solver-axis stores (the ``headtohead``
+  preset): per-solver rounds-to-ε / exact-ledger bits-to-ε columns plus
+  the first-order/Newton round ratios (the paper's headline claim);
 * :func:`wire_table` — per-cell wire adaptivity off the persisted
   per-round ``uplink_delta`` / ``k_trajectory`` series: mean / final
   measured δ̂, the k the schedule started and ended at, and how many
@@ -74,6 +78,16 @@ def _comp_label(rec: dict) -> str:
     return str(_spec(rec).get("compressor") or "identity")
 
 
+#: solver spec heads → the short column labels the pivots print
+_SOLVER_LABELS = {"cubic_newton": "newton", "byzantine_pgd": "pgd",
+                  "compressed_sgd": "sgd"}
+
+
+def _solver_head(rec: dict) -> str:
+    return str(_spec(rec).get("solver")
+               or "cubic_newton").partition(":")[0]
+
+
 # ----------------------------------------------------------------- pivots
 def resilience_table(records: Iterable[dict]) -> list[dict]:
     """Attack × aggregator frontier, grouped by (problem, α, compressor).
@@ -111,9 +125,54 @@ def eps_table(records: Iterable[dict], eps_grid=(0.3, 0.1, 0.05)) -> list[dict]:
                "alpha": s.get("alpha"),
                "compressor": _comp_label(rec),
                "total_bits": rec.get("metrics", {}).get("total_bits")}
+        if "solver" in s:   # only solver-axis stores grow the column
+            row["solver"] = _SOLVER_LABELS.get(_solver_head(rec),
+                                               _solver_head(rec))
         for eps in eps_grid:
             row[f"rounds@{eps:g}"] = rounds_to_eps(rec, eps)
             row[f"bits@{eps:g}"] = bits_to_eps(rec, eps)
+        rows.append(row)
+    return rows
+
+
+def headtohead_table(records: Iterable[dict],
+                     eps: float = 0.05) -> list[dict]:
+    """Second-order vs first-order per (problem, attack, aggregator, α).
+
+    One row per scenario; per-solver columns hold rounds-to-ε and exact
+    ledger bits-to-ε (``—`` where the budget never reached ε), and the
+    ``*_round_ratio`` columns give first-order rounds / Newton rounds —
+    the paper's headline iteration-complexity comparison, straight off
+    one store.  Only meaningful on stores that sweep the ``solver`` axis
+    (e.g. the ``headtohead`` preset); returns ``[]`` otherwise.
+    """
+    groups: "OrderedDict[tuple, OrderedDict]" = OrderedDict()
+    for rec in records:
+        s = _spec(rec)
+        gkey = (s.get("problem"),
+                str(s.get("attack", "none")).partition(":")[0],
+                _agg_head(rec), s.get("alpha"))
+        # to_dict omits the default solver, so a missing key IS the
+        # Newton cell — the scenario's comparison anchor
+        label = _SOLVER_LABELS.get(_solver_head(rec), _solver_head(rec))
+        groups.setdefault(gkey, OrderedDict())[label] = rec
+    rows = []
+    for (problem, attack, agg, alpha), cells in groups.items():
+        if set(cells) == {"newton"}:
+            continue    # no first-order cell to compare against
+        row = {"problem": problem, "attack": attack, "aggregator": agg,
+               "alpha": alpha}
+        for label, rec in cells.items():
+            row[f"{label}_rounds@{eps:g}"] = rounds_to_eps(rec, eps)
+            row[f"{label}_bits@{eps:g}"] = bits_to_eps(rec, eps)
+        newton = row.get(f"newton_rounds@{eps:g}")
+        for label in cells:
+            if label == "newton":
+                continue
+            fo = row.get(f"{label}_rounds@{eps:g}")
+            row[f"{label}_round_ratio"] = (
+                fo / newton if fo is not None and newton else None
+            )
         rows.append(row)
     return rows
 
@@ -183,6 +242,10 @@ def report(store, eps_grid=(0.3, 0.1, 0.05), printer=print) -> dict:
     eps_rows = eps_table(recs, eps_grid)
     printer("\n## rounds-to-ε / bits-to-ε")
     printer(render_table(eps_rows))
+    h2h_rows = headtohead_table(recs, eps=min(eps_grid))
+    if h2h_rows:
+        printer("\n## solver head-to-head (second-order vs first-order)")
+        printer(render_table(h2h_rows))
     wire_rows = wire_table(recs)
     if any(r["delta_mean"] is not None or r["k_start"] is not None
            for r in wire_rows):
@@ -190,7 +253,8 @@ def report(store, eps_grid=(0.3, 0.1, 0.05), printer=print) -> dict:
         printer(render_table(wire_rows))
     else:
         wire_rows = []
-    return {"resilience": frontier, "eps": eps_rows, "wire": wire_rows}
+    return {"resilience": frontier, "eps": eps_rows,
+            "headtohead": h2h_rows, "wire": wire_rows}
 
 
 # ----------------------------------------------------------------- plots

@@ -1,0 +1,212 @@
+"""The solver axis: spec grammar, degenerate-parity pins, and per-solver
+ledger exactness (escape-probe rounds included).
+
+The two parity pins are the contracts the first-order baselines are
+allowed to claim comparability under:
+
+* ``compressed_sgd`` with ``compressor=None``, ``aggregator="mean"``,
+  α = 0 IS plain robust SGD — bit for bit, not allclose;
+* ``byzantine_pgd`` through the facade is the same loop as the legacy
+  ``repro.core.ByzantinePGD`` surface (now a shim): identical round
+  count AND identical iterates on the w8a problem.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import ExperimentSpec, SpecError
+from repro.solvers import FIRST_ORDER_SOLVERS, parse_solver_spec
+
+
+# ------------------------- spec grammar ------------------------------------
+
+
+def test_parse_solver_spec_grammar():
+    assert parse_solver_spec(None) == ("cubic_newton", {})
+    assert parse_solver_spec("cubic_newton") == ("cubic_newton", {})
+    assert parse_solver_spec("byzantine_pgd") == \
+        ("byzantine_pgd", {"R": 10, "Q": 10})
+    assert parse_solver_spec("byzantine_pgd:3:5") == \
+        ("byzantine_pgd", {"R": 3, "Q": 5})
+    assert parse_solver_spec("compressed_sgd") == \
+        ("compressed_sgd", {"perturb_radius": 0.0, "perturb_gtol": 0.0})
+    assert parse_solver_spec("compressed_sgd:1.5:0.1") == \
+        ("compressed_sgd",
+         {"perturb_radius": 1.5, "perturb_gtol": 0.1})
+
+
+@pytest.mark.parametrize("bad", [
+    "sgd",                      # unknown head
+    "cubic_newton:3",           # newton takes no parameters
+    "byzantine_pgd:3",          # wrong arity
+    "byzantine_pgd:three:5",    # non-numeric
+    "byzantine_pgd:-1:5",       # R < 0
+    "byzantine_pgd:3:0",        # Q < 1
+    "compressed_sgd:1.0",       # wrong arity
+    "compressed_sgd:-1.0:0.1",  # radius < 0
+    3,                          # not a string
+])
+def test_parse_solver_spec_rejects(bad):
+    with pytest.raises(SpecError):
+        parse_solver_spec(bad)
+
+
+def test_validate_rejects_newton_only_axes():
+    base = dict(problem="synthetic-logistic:200:10", m_workers=4)
+    # first-order solvers are paper-runtime only
+    with pytest.raises(SpecError, match="runtime='paper' only"):
+        ExperimentSpec(solver="compressed_sgd", runtime="async",
+                       **base).validate()
+    # exact_gradient is the Newton Remark-5 two-round mode
+    with pytest.raises(SpecError, match="exact_gradient"):
+        ExperimentSpec(solver="byzantine_pgd", exact_gradient=True,
+                       **base).validate()
+    # Yin et al.'s PGD has no momentum term
+    with pytest.raises(SpecError, match="momentum"):
+        ExperimentSpec(solver="byzantine_pgd", momentum=0.5,
+                       **base).validate()
+    # ... but momentum-SGD is exactly what compressed_sgd offers
+    ExperimentSpec(solver="compressed_sgd", momentum=0.5, **base).validate()
+    # bad grammar surfaces at validate time too
+    with pytest.raises(SpecError):
+        ExperimentSpec(solver="byzantine_pgd:3", **base).validate()
+
+
+def test_default_solver_omitted_from_dict():
+    """Pre-existing spec dicts (and sweep-store hashes) must not change:
+    the default solver is omitted exactly like the default async axes."""
+    d = ExperimentSpec(problem="synthetic-logistic:200:10").to_dict()
+    assert "solver" not in d
+    spec = ExperimentSpec(problem="synthetic-logistic:200:10",
+                          solver="byzantine_pgd:3:5")
+    assert spec.to_dict()["solver"] == "byzantine_pgd:3:5"
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert "byzantine_pgd" in FIRST_ORDER_SOLVERS
+
+
+# ------------------------- degenerate parity -------------------------------
+
+
+def test_degenerate_compressed_sgd_is_plain_sgd_bit_exact():
+    """compressed_sgd(mean, α=0, identity wire, momentum 0, radius 0)
+    compiles to the plain-SGD round — same floats, not allclose."""
+    exp = ExperimentSpec(
+        solver="compressed_sgd", problem="synthetic-logistic:1000:20",
+        m_workers=10, eta=1.0, seed=0,
+    ).build()
+    prob = exp.problem
+    w_sgd, hist = exp.run(5)
+
+    grads = jax.vmap(jax.grad(prob.loss_fn), in_axes=(None, 0, 0))
+
+    # reference with the data as jit ARGUMENTS, matching the solver's
+    # round signature — closure-constant data compiles to different
+    # float rounding, so this is part of the contract
+    @jax.jit
+    def sgd_round(w, X, y):
+        return w - 1.0 * jnp.mean(grads(w, X, y), axis=0)
+
+    w_ref = prob.w0
+    for _ in range(5):
+        w_ref = sgd_round(w_ref, prob.X_workers, prob.y_workers)
+    assert bool(jnp.all(w_sgd == w_ref))
+    assert hist["rounds"] == 5
+
+
+def test_pgd_facade_matches_legacy_shim_on_w8a():
+    """Channel-routed byzantine_pgd through the facade reproduces the
+    legacy ByzantinePGD surface exactly: same rounds, same iterates."""
+    from repro.core import AttackConfig, ByzantinePGD, PGDConfig
+
+    exp = ExperimentSpec(
+        problem="w8a-robust", m_workers=20, eta=1.0,
+        solver="byzantine_pgd", aggregator="trimmed_mean:0.2",
+        attack="gaussian:10.0", alpha=0.2, seed=0,
+    ).build()
+    w_api, h_api = exp.run(25, grad_tol=0.05)
+
+    prob = exp.problem
+    legacy = ByzantinePGD(
+        prob.loss_fn, PGDConfig(lr=1.0),
+        AttackConfig(name="gaussian", alpha=0.2, sigma=10.0),
+    )
+    w_leg, h_leg = legacy.run(prob.w0, prob.X_workers, prob.y_workers,
+                              max_rounds=25, grad_tol=0.05)
+    assert h_api["rounds"] == h_leg["rounds"]
+    assert h_api["uplink_bits"] == h_leg["uplink_bits"]
+    assert bool(jnp.all(w_api == w_leg))
+
+
+# ------------------------- ledger exactness --------------------------------
+
+
+def _ledger_exact(h, bps):
+    assert isinstance(h["uplink_bits"], int)
+    assert isinstance(h["downlink_bits"], int)
+    assert h["uplink_bits"] == bps["uplink"] * h["rounds"]
+    assert h["downlink_bits"] == bps["downlink"] * h["rounds"]
+    assert h["total_bits"] == h["uplink_bits"] + h["downlink_bits"]
+
+
+def test_sgd_ledger_exact_compressed_wire():
+    exp = ExperimentSpec(
+        solver="compressed_sgd", problem="synthetic-logistic:500:16",
+        m_workers=8, eta=1.0, compressor="topk:0.25",
+        aggregator="norm_trim:0.5", attack="gaussian:10.0", alpha=0.25,
+        seed=1,
+    ).build()
+    _, h = exp.run(12)
+    bps = exp.bits_per_step()
+    assert bps["uplink"] < 8 * 32 * 16        # the top-k wire is compressed
+    _ledger_exact(h, bps)
+
+
+def test_pgd_escape_probes_billed_and_budget_capped():
+    """Forced escape: probe rounds are billed on the ledger, counted in
+    hist["rounds"], and NEVER overshoot n_steps (unlike the legacy
+    loop)."""
+    from repro.solvers import ChannelByzantinePGD, PGDParams
+    from repro.data import make_classification, shard_to_workers
+
+    def loss(w, X, y):
+        z = X @ w
+        yy = 2.0 * y - 1.0
+        return jnp.mean(jnp.log1p(jnp.exp(-yy * z))) + 0.5e-3 * w @ w
+
+    X, y, _ = make_classification(jax.random.PRNGKey(0), 400, 12)
+    Xm, ym = shard_to_workers(X, y, 8)
+
+    # grad_tol so loose the very first round triggers Escape; f_th so
+    # strict every attempt is rejected → loop certifies and stops
+    solver = ChannelByzantinePGD(
+        loss, PGDParams(lr=1.0, R=2, Q=3, f_th=1e9, grad_th=1e-4)
+    )
+    _, h = solver.run(jnp.zeros(12), Xm, ym, n_steps=50, grad_tol=1e9)
+    assert h["escape_rounds"] == 2 * 3
+    assert h["rounds"] == 1 + 2 * 3           # one main round + all probes
+    _ledger_exact(h, solver.bits_per_step())
+    assert solver.bits_per_step()["uplink"] == 8 * 32 * 12
+
+    # budget cap: probes stop mid-attempt at the round budget
+    solver = ChannelByzantinePGD(
+        loss, PGDParams(lr=1.0, R=5, Q=10, f_th=1e9, grad_th=1e-4)
+    )
+    _, h = solver.run(jnp.zeros(12), Xm, ym, n_steps=4, grad_tol=1e9)
+    assert h["rounds"] == 4                   # == n_steps, never over
+    assert h["escape_rounds"] == 3
+    _ledger_exact(h, solver.bits_per_step())
+
+
+def test_solver_history_schema_matches_newton():
+    """Sweep/report pivots consume the same keys across the solver axis."""
+    exp = ExperimentSpec(
+        solver="byzantine_pgd:2:2", problem="synthetic-logistic:300:8",
+        m_workers=4, eta=1.0, seed=0,
+    ).build()
+    _, h = exp.run(6)
+    for key in ("loss", "grad_norm", "rounds", "bits_cumulative",
+                "uplink_delta", "k_trajectory", "saddle_escape_step",
+                "truncated", "uplink_bits", "downlink_bits", "total_bits"):
+        assert key in h, key
+    assert len(h["bits_cumulative"]) == len(h["loss"])
+    assert h["bits_cumulative"][-1] <= h["total_bits"]
