@@ -37,13 +37,21 @@ def main(argv=None) -> None:
                          "section (plus per-round/wire/compile events from "
                          "the runs underneath) into DIR/events.jsonl and a "
                          "Perfetto-loadable DIR/trace.json")
+    ap.add_argument("--bench-ledger", default="results/bench",
+                    help="append one fingerprinted BENCH_<name>.json "
+                         "record per entry under this dir (compare with "
+                         "`python -m repro.obsv bench-compare`); pass an "
+                         "empty string to disable")
     args = ap.parse_args(argv)
 
+    from repro.obsv import append_ledger, extract_scalars, fingerprint
     from repro.telemetry import get_telemetry
 
     tel = get_telemetry()
     if args.trace_dir is not None:
         tel.enable(args.trace_dir)
+
+    meta = fingerprint()
 
     def _store(name):
         if args.sweep_store_dir is None:
@@ -293,9 +301,21 @@ def main(argv=None) -> None:
         for name, us, derived_us in roofline.kernel_microbench():
             _emit(f"kernel/{name}", us, f"tpu_roofline_us={derived_us:.2f}")
 
+    all_results["meta"] = meta
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(all_results, f, indent=1, default=str)
+    if args.bench_ledger:
+        n_led = 0
+        for name, entry in all_results.items():
+            if name == "meta":
+                continue
+            scalars = extract_scalars(name, entry)
+            if scalars:
+                append_ledger(args.bench_ledger, name, scalars, meta)
+                n_led += 1
+        print(f"# bench ledger -> {args.bench_ledger} "
+              f"({n_led} BENCH_<name>.json files)")
     if args.trace_dir is not None:
         tel.flush()
         print(f"# telemetry -> {args.trace_dir}")

@@ -27,8 +27,13 @@ trace); the returned object serves BOTH runtimes:
   every leaf ``(m, …)``) → ``(aggregate_tree, keep_mask)``.
 
 ``keep_mask`` is an ``(m,)`` float mask of the workers whose update
-contributed (all-ones for the coordinate-wise rules, one-hot for krum) —
-the metric both runtimes already expose.  ``check_resilience(alpha, m)``
+contributed — 0/1 by rank for norm_trim, one-hot for krum, and a SOFT
+fraction-of-coordinates-contributed for the coordinate-wise rules
+(trimmed_mean / coordinate_median, flat path; 0 means trimmed away in
+every coordinate) — the forensic signal the schema-v4 round records
+carry per worker.  The mask never feeds back into the aggregate (the
+async staleness weighting binarizes it), so soft values change no
+trajectory.  ``check_resilience(alpha, m)``
 returns None when the rule provably tolerates a Byzantine fraction α at
 cluster size m, else the reason it does not —
 :meth:`ExperimentSpec.validate` turns that into a build-time
@@ -249,7 +254,15 @@ class TrimmedMean(Aggregator):
                 updates.dtype)
         else:
             agg = _agg.trimmed_mean(updates, self.trim_frac)
-        return agg, self._ones(m, updates.dtype)
+        # soft keep: the fraction of coordinates each worker actually
+        # contributed to (0 = trimmed away everywhere — the forensic
+        # rejection signal; kernel and registry paths share this exact
+        # rank math, so the mask is layout-independent)
+        k = min(int(round(self.trim_frac * m)), (m - 1) // 2)
+        keep = (self._ones(m, updates.dtype) if k == 0 else
+                _agg.contribution_keep(updates, k, m - k)
+                .astype(updates.dtype))
+        return agg, keep
 
     def tree(self, updates_tree):
         m = self._m(updates_tree)
@@ -288,7 +301,12 @@ class CoordinateMedian(Aggregator):
             agg = coordinate_median_fused(updates).astype(updates.dtype)
         else:
             agg = _agg.coordinate_median(updates)
-        return agg, self._ones(m, updates.dtype)
+        # soft keep: fraction of coordinates where the worker's value was
+        # a median contributor (the middle rank, or both for even m)
+        keep = _agg.contribution_keep(
+            updates, (m - 1) // 2, m // 2 + 1
+        ).astype(updates.dtype)
+        return agg, keep
 
     def tree(self, updates_tree):
         m = self._m(updates_tree)

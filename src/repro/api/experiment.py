@@ -483,8 +483,9 @@ class Experiment:
         import jax
 
         from ..comm import WireLedger
-        from ..telemetry import (RoundRecord, compile_scope, get_telemetry,
-                                 rejected_from_keep)
+        from ..telemetry import (RoundRecord, SuspicionTracker,
+                                 compile_scope, get_telemetry,
+                                 planted_byzantine_ids, rejected_from_keep)
 
         params = self.problem.w0
         batch = self.problem.batch
@@ -496,6 +497,8 @@ class Experiment:
                 "truncated": False}
         tel = get_telemetry()
         prev_loss = None
+        m = self.spec.m_workers
+        tracker = SuspicionTracker(m) if tel.enabled else None
         for t in range(n_steps):
             if deadline is not None and hist["loss"] \
                     and _time.monotonic() >= deadline:
@@ -520,6 +523,14 @@ class Experiment:
             hist["uplink_delta"].append(float(metrics["uplink_delta"]))
             hist["bits_cumulative"].append(ledger.total_bits)
             if tel.enabled:
+                # schema-v4 forensics from the metrics the mesh step
+                # already surfaces host-side (no new traced outputs; the
+                # tree-stacked wire has no per-worker δ̂ view, so
+                # worker_delta stays absent on runtime="mesh")
+                keep_l = [float(k) for k in metrics["kept"]]
+                norms_l = [float(n) for n in metrics["update_norms"]]
+                attacked = (self.spec.attack != "none"
+                            and self.spec.alpha > 0)
                 tel.round(RoundRecord(
                     step=t, runtime="mesh", loss=loss,
                     model_decrease=(None if prev_loss is None
@@ -529,6 +540,12 @@ class Experiment:
                     attack=self.spec.attack, alpha=self.spec.alpha,
                     wire_uplink_bits=wire["uplink"],
                     wire_downlink_bits=wire["downlink"],
+                    worker_bits=[wire["uplink"] // m] * m,
+                    worker_keep=keep_l,
+                    worker_norms=norms_l,
+                    suspicion=tracker.update(keep=keep_l, norms=norms_l),
+                    byzantine_true=(planted_byzantine_ids(
+                        m, self.spec.alpha) if attacked else None),
                 ), name="mesh.round")
                 prev_loss = loss
         hist["rounds"] = ledger.rounds

@@ -72,7 +72,11 @@ class StalenessWeighted:
         else:
             keep = jnp.ones((n,), jnp.float32)
         ages = jnp.asarray(ages, jnp.float32)
-        wts = keep.astype(jnp.float32) * (self.decay ** ages)
+        # binarize: a soft keep (trimmed_mean's per-coordinate fraction)
+        # is a forensic signal, not an aggregation weight — only fully
+        # rejected arrivals (keep == 0) are excluded, so 0/1 and one-hot
+        # base rules behave exactly as before
+        wts = (keep > 0).astype(jnp.float32) * (self.decay ** ages)
         total = jnp.sum(wts)
         # all-rejected stacks (a paranoid base rule on a tiny cohort, or
         # a norm-guarded lone arrival) contribute nothing rather than NaN

@@ -50,8 +50,10 @@ import jax.numpy as jnp
 from ..core.newton import AttackConfig, DistributedCubicNewton, NewtonConfig
 from ..telemetry import (
     RoundRecord,
+    SuspicionTracker,
     compile_scope,
     get_telemetry,
+    planted_byzantine_ids,
     rejected_from_keep,
 )
 from .aggregate import StalenessWeighted
@@ -125,10 +127,20 @@ class AsyncCubicNewton(DistributedCubicNewton):
         s = jax.vmap(
             lambda Xi, yi: self._worker_solve(w, Xi, yi, None)
         )(X, y_used)
-        s_hat, new_state, delta = self.uplink.transmit(
-            s, uplink_state, key=k_comp, attack_key=k_update, measure=True
-        )
-        return s_hat, new_state, delta
+        if get_telemetry().enabled:
+            # forensics: also stage the per-sender δ̂ (trace-time gate —
+            # the disabled program is the exact pre-forensics HLO)
+            s_hat, new_state, delta, worker_delta = self.uplink.transmit(
+                s, uplink_state, key=k_comp, attack_key=k_update,
+                measure=True, per_sender=True,
+            )
+        else:
+            s_hat, new_state, delta = self.uplink.transmit(
+                s, uplink_state, key=k_comp, attack_key=k_update,
+                measure=True,
+            )
+            worker_delta = None
+        return s_hat, new_state, delta, worker_delta
 
     def _downlink_impl(self, v_new, downlink_state, key):
         """Center broadcast of the aggregated step (η·v), own channel."""
@@ -198,6 +210,7 @@ class AsyncCubicNewton(DistributedCubicNewton):
                 "staleness_mean": []}
         tel = get_telemetry()
         prev_loss = float(lossf(w0, Xf, yf)) if tel.enabled else None
+        tracker = SuspicionTracker(m) if tel.enabled else None
         w = w0
         v = jnp.zeros_like(w0)
         state = self.init_comm_state()
@@ -215,7 +228,7 @@ class AsyncCubicNewton(DistributedCubicNewton):
             k_live = self._uplink_k()
             cohort = sched.cohort(t)
             with compile_scope("async.compute"):
-                s_hat, cand_state, delta_hat = self._ct(
+                s_hat, cand_state, delta_hat, worker_delta = self._ct(
                     w, state["uplink"], X, y, sub
                 )
             # wire accounting at SEND time: every packet pays its payload
@@ -224,9 +237,11 @@ class AsyncCubicNewton(DistributedCubicNewton):
             # send at the size it actually shipped
             bps = self.bits_per_step()
             msg_bits = bps["uplink"] // m
+            paid_bits = [0] * m   # exact per-worker bits paid this round
             for i in cohort:
                 i = int(i)
                 copies = 2 if sched.duplicated(t, i) else 1
+                paid_bits[i] = msg_bits * copies
                 for c in range(copies):
                     ledger.record(uplink=msg_bits, rounds=0, label="uplink")
                     if sched.dropped(t, i, copy=c):
@@ -253,6 +268,11 @@ class AsyncCubicNewton(DistributedCubicNewton):
             state["uplink"] = uplink_state
 
             rejected_workers = []
+            # per-worker forensic view of this round (schema v4): None
+            # entries are workers whose send did not arrive this round
+            worker_keep = [None] * m
+            worker_staleness = [None] * m
+            worker_norms = [None] * m
             if arrivals:
                 stack = jnp.stack([msg.payload for msg in arrivals])
                 agg, keep = self.staleness_agg(stack, ages)
@@ -261,6 +281,20 @@ class AsyncCubicNewton(DistributedCubicNewton):
                 rejected_workers = sorted({
                     arrivals[i].worker for i in rejected_from_keep(keep)
                 })
+                if tel.enabled:
+                    arrival_norms = jnp.linalg.norm(
+                        stack.reshape(stack.shape[0], -1), axis=-1
+                    )
+                    for idx, msg in enumerate(arrivals):
+                        i, age = msg.worker, t - msg.send_round
+                        k_i, n_i = float(keep[idx]), float(arrival_norms[idx])
+                        # duplicates: keep the freshest / most-kept view
+                        if worker_keep[i] is None or k_i > worker_keep[i]:
+                            worker_keep[i] = k_i
+                            worker_norms[i] = n_i
+                        if (worker_staleness[i] is None
+                                or age < worker_staleness[i]):
+                            worker_staleness[i] = age
                 v = self.config.momentum * v + agg
                 with compile_scope("async.downlink"):
                     delta, state["downlink"] = self._down(
@@ -300,6 +334,13 @@ class AsyncCubicNewton(DistributedCubicNewton):
             if escaped:
                 hist["saddle_escape_step"] = t
             if tel.enabled:
+                cohort_set = {int(i) for i in cohort}
+                wdelta = [
+                    (float(worker_delta[i]) if i in cohort_set else None)
+                    for i in range(m)
+                ] if worker_delta is not None else None
+                suspicion = tracker.update(keep=worker_keep,
+                                           norms=worker_norms)
                 tel.round(RoundRecord(
                     step=t, runtime=self.runtime_label, loss=loss,
                     grad_norm=gn,
@@ -317,6 +358,16 @@ class AsyncCubicNewton(DistributedCubicNewton):
                     queue_depth=queue.depth,
                     participation=acfg.participation,
                     arrival_staleness=ages,
+                    worker_bits=paid_bits,
+                    worker_delta=wdelta,
+                    worker_keep=worker_keep,
+                    worker_norms=worker_norms,
+                    worker_staleness=worker_staleness,
+                    suspicion=suspicion,
+                    byzantine_true=(
+                        planted_byzantine_ids(m, self._attack_rule.alpha)
+                        if self._attack_rule.kind != "none" else None
+                    ),
                 ), name="newton.round")
                 tel.observe("async.queue_depth", queue.depth)
                 for age in ages:

@@ -69,6 +69,19 @@ def _measured_delta(sent, received):
     return jnp.where(den > 0, 1.0 - num / jnp.maximum(den, 1e-30), 1.0)
 
 
+def _per_sender_delta(sent, received):
+    """Per-sender achieved contraction δ̂_i over an (m, d) stack — one
+    norm ratio per row, same definition as :func:`_measured_delta` but
+    never summed across senders (the forensic per-worker view; the
+    global δ̂ stays its own reduction so existing trajectories are
+    bit-identical)."""
+    x32 = sent.astype(jnp.float32)
+    r32 = received.astype(jnp.float32)
+    num = jnp.sum((x32 - r32) ** 2, axis=-1)
+    den = jnp.sum(x32 * x32, axis=-1)
+    return jnp.where(den > 0, 1.0 - num / jnp.maximum(den, 1e-30), 1.0)
+
+
 class Channel:
     """Shared direction/feedback bookkeeping for both layouts."""
 
@@ -123,12 +136,18 @@ class VectorChannel(Channel):
 
     # -- the wire -------------------------------------------------------
     def transmit(self, x, state, *, key=None, attack_key=None,
-                 measure: bool = False):
+                 measure: bool = False, per_sender: bool = False):
         """One round: compress/EF every sender's vector, reconstruct at
         the receiver, inject Byzantine payloads.  Returns ``(x̂, state')``
         — or ``(x̂, state', δ̂)`` with ``measure=True``, where δ̂ is the
         achieved contraction measured BEFORE Byzantine injection (so the
         adaptive schedule sees the compressor, not the attacker).
+
+        ``per_sender=True`` (requires ``measure``) appends a fourth
+        output: the (n_senders,) per-sender δ̂ — the forensic per-worker
+        view.  The global δ̂ is still computed by its own reduction
+        (:func:`_measured_delta`), so trajectories that only consume it
+        stay bit-identical whether or not per-sender measurement is on.
         """
         x_sent = x
         comp, fb = self.compressor, self.feedback
@@ -150,9 +169,14 @@ class VectorChannel(Channel):
                 else:
                     x = comp.roundtrip(x, key=key)
         delta = _measured_delta(x_sent, x) if measure else None
+        worker_delta = (_per_sender_delta(
+            x_sent.reshape(self.n_senders, -1), x.reshape(self.n_senders, -1)
+        ) if measure and per_sender else None)
         if self.attack_hook is not None and attack_key is not None:
             x = self.attack_hook(attack_key, x)
         if measure:
+            if per_sender:
+                return x, state, delta, worker_delta
             return x, state, delta
         return x, state
 
@@ -170,7 +194,8 @@ class VectorChannel(Channel):
                 and self.feedback is None
                 and self.attack_hook is None)
 
-    def transmit_sparse(self, x, state, *, key=None, measure: bool = False):
+    def transmit_sparse(self, x, state, *, key=None, measure: bool = False,
+                        per_sender: bool = False):
         """Payload-shaped receive: compress every sender's vector but hand
         the receiver the wire payloads themselves — values ``(m, k)`` and
         int32 indices ``(m, k)`` — instead of reconstructing m dense
@@ -205,6 +230,17 @@ class VectorChannel(Channel):
             num = den - jnp.sum(vals.astype(jnp.float32) ** 2)
             delta = jnp.where(den > 0, 1.0 - num / jnp.maximum(den, 1e-30),
                               1.0)
+            if per_sender:
+                # same payload-norm identity, one ratio per sender
+                xw = x32.reshape(self.n_senders, -1)
+                den_w = jnp.sum(xw * xw, axis=-1)
+                num_w = den_w - jnp.sum(
+                    vals.astype(jnp.float32) ** 2, axis=-1
+                )
+                worker_delta = jnp.where(
+                    den_w > 0, 1.0 - num_w / jnp.maximum(den_w, 1e-30), 1.0
+                )
+                return (vals, idx), state, delta, worker_delta
             return (vals, idx), state, delta
         return (vals, idx), state
 

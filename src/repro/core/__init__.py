@@ -19,6 +19,7 @@ from :func:`make_stateful_train_step`.
 """
 from .aggregation import (
     AGGREGATORS,
+    contribution_keep,
     coordinate_median,
     coordinate_median_tree,
     krum,

@@ -78,6 +78,21 @@ def norm_trim_tree(updates_tree, beta: float):
     return jax.tree_util.tree_map(agg_leaf, updates_tree), keep
 
 
+def contribution_keep(updates, lo: int, hi: int):
+    """Soft keep mask for the coordinate-wise rules: the fraction of
+    coordinates where each worker's value ranked inside ``[lo, hi)`` —
+    i.e. actually entered the trimmed-mean / median epilogue.  1 means
+    every coordinate contributed, 0 means the worker was trimmed away
+    everywhere (``rejected_from_keep`` rejects exactly those).  Ties are
+    broken by worker index, matching ``jnp.sort``'s stable order."""
+    m = updates.shape[0]
+    flat = updates.reshape(m, -1)
+    order = jnp.argsort(flat, axis=0)
+    ranks = jnp.argsort(order, axis=0)
+    kept = (ranks >= lo) & (ranks < hi)
+    return kept.mean(axis=1).astype(jnp.float32)
+
+
 def coordinate_median(updates):
     """Coordinate-wise median (ByzantinePGD option)."""
     return jnp.median(updates, axis=0)

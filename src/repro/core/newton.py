@@ -35,8 +35,10 @@ from ..comm import VectorChannel, WireLedger
 from ..compression import AdaptiveTopK
 from ..telemetry import (
     RoundRecord,
+    SuspicionTracker,
     compile_scope,
     get_telemetry,
+    planted_byzantine_ids,
     record_retrace,
     rejected_from_keep,
 )
@@ -255,24 +257,43 @@ class DistributedCubicNewton:
         # payloads, so compression grants them no protection.  ``measure``
         # surfaces the achieved contraction δ̂ (one norm ratio, taken
         # BEFORE Byzantine injection) for the adaptive-k schedule.
+        # per-worker δ̂ is forensic-only: staged into the trace ONLY when
+        # telemetry is enabled at trace time, so the disabled program is
+        # the exact pre-forensics HLO (the zero-cost contract's pin)
+        forensics = get_telemetry().enabled
+        worker_delta = None
         if self._use_sparse_center:
             # sparse-domain center: the wire payloads (m, k) go straight
             # to the aggregator's sparse path — the m dense (d,) vectors
             # are never materialized at the center (O(m·k) not O(m·d)).
             # Valid exactly when the channel has no EF state and no
             # update attack (supports_sparse_receive, checked at build).
-            (pv, pidx), new_state["uplink"], uplink_delta = \
-                self.uplink.transmit_sparse(
-                    s, state["uplink"], key=k_comp, measure=True
-                )
+            if forensics:
+                (pv, pidx), new_state["uplink"], uplink_delta, \
+                    worker_delta = self.uplink.transmit_sparse(
+                        s, state["uplink"], key=k_comp, measure=True,
+                        per_sender=True,
+                    )
+            else:
+                (pv, pidx), new_state["uplink"], uplink_delta = \
+                    self.uplink.transmit_sparse(
+                        s, state["uplink"], key=k_comp, measure=True
+                    )
             agg, keep = self.aggregator.sparse(pv, pidx, w.shape[0])
             # payload norms == reconstruction norms (distinct indices)
             update_norms = jnp.linalg.norm(pv, axis=-1)
         else:
-            s, new_state["uplink"], uplink_delta = self.uplink.transmit(
-                s, state["uplink"], key=k_comp, attack_key=k_update,
-                measure=True
-            )
+            if forensics:
+                s, new_state["uplink"], uplink_delta, worker_delta = \
+                    self.uplink.transmit(
+                        s, state["uplink"], key=k_comp, attack_key=k_update,
+                        measure=True, per_sender=True,
+                    )
+            else:
+                s, new_state["uplink"], uplink_delta = self.uplink.transmit(
+                    s, state["uplink"], key=k_comp, attack_key=k_update,
+                    measure=True
+                )
 
             # Center: the resolved aggregation rule (Algorithm 1, step 6
             # is norm_trim; krum / trimmed_mean / coordinate_median /
@@ -291,10 +312,13 @@ class DistributedCubicNewton:
             cfg.eta * v_new, state["downlink"], key=k_down
         )
         w_new = w + delta
-        return w_new, v_new, new_state, {
+        info = {
             "update_norms": update_norms, "keep": keep,
             "uplink_delta": uplink_delta,
         }
+        if worker_delta is not None:
+            info["worker_delta"] = worker_delta
+        return w_new, v_new, new_state, info
 
     # ------------------------------------------------------------------
     def step(self, w, X, y, key, v=None, state=None):
@@ -371,6 +395,27 @@ class DistributedCubicNewton:
         comp = self.uplink.compressor if self.uplink is not None else None
         return comp.k if isinstance(comp, AdaptiveTopK) else None
 
+    def _worker_round_fields(self, info: dict, m: int, bps: dict,
+                             tracker: SuspicionTracker) -> dict:
+        """The schema-v4 per-worker round fields (host-side; called only
+        when telemetry is enabled).  Uplink bits split evenly: every
+        worker ships the same static payload per round."""
+        keep = [float(k) for k in info["keep"]]
+        norms = [float(n) for n in info["update_norms"]]
+        fields = {
+            "worker_bits": [bps["uplink"] // m] * m,
+            "worker_keep": keep,
+            "worker_norms": norms,
+            "suspicion": tracker.update(keep=keep, norms=norms),
+        }
+        if info.get("worker_delta") is not None:
+            fields["worker_delta"] = [float(x) for x in info["worker_delta"]]
+        if self._attack_rule.kind != "none":
+            fields["byzantine_true"] = planted_byzantine_ids(
+                m, self._attack_rule.alpha
+            )
+        return fields
+
     def run(
         self,
         w0,
@@ -421,6 +466,7 @@ class DistributedCubicNewton:
         # f(w0) anchors the first round's model decrease; only computed
         # when someone is listening (one extra loss eval)
         prev_loss = float(lossf(w0, Xf, yf)) if tel.enabled else None
+        tracker = SuspicionTracker(X.shape[0]) if tel.enabled else None
         w = w0
         v = jnp.zeros_like(w0)
         state = self.init_comm_state()
@@ -472,6 +518,8 @@ class DistributedCubicNewton:
                     wire_downlink_bits=bps["downlink"],
                     center_bytes=center_bytes,
                     agg_kernel=self._agg_kernel_label(),
+                    **self._worker_round_fields(info, X.shape[0], bps,
+                                                tracker),
                 ), name="newton.round")
                 # the O(m·k)-vs-O(m·d) claim, measured per round
                 tel.gauge("newton.center_bytes", center_bytes, step=t,

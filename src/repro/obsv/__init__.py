@@ -1,0 +1,48 @@
+"""repro.obsv — run-health doctor and benchmark regression ledger.
+
+The observability layer ON TOP of :mod:`repro.telemetry`: where
+telemetry records what happened, ``obsv`` judges it.
+
+* ``python -m repro.obsv doctor <telemetry-dir|events.jsonl>`` joins a
+  schema-v4 telemetry stream (optionally with a sweep
+  :class:`~repro.sweep.store.ResultStore`) into a run-health report:
+  per-run attack-detection precision/recall (the suspicion-flagged
+  worker set vs the planted Byzantine ids), saddle-escape /
+  EF-divergence / wire-ledger-mismatch anomaly flags, and per-worker
+  suspicion tracks appended to the existing Perfetto trace;
+* ``python -m repro.obsv bench-compare`` diffs the fingerprinted
+  ``BENCH_<name>.json`` ledgers ``benchmarks/run.py`` appends against
+  committed baselines and fails on threshold regressions.
+
+See ``src/repro/telemetry/README.md`` for the schema-v4 field table the
+doctor consumes.
+"""
+from .bench import (
+    append_ledger,
+    compare_ledgers,
+    extract_scalars,
+    fingerprint,
+)
+from .doctor import (
+    analyze_events,
+    augment_trace,
+    detection_metrics,
+    flagged_workers,
+    group_runs,
+    load_events,
+    run_anomalies,
+)
+
+__all__ = [
+    "analyze_events",
+    "augment_trace",
+    "detection_metrics",
+    "flagged_workers",
+    "group_runs",
+    "load_events",
+    "run_anomalies",
+    "append_ledger",
+    "compare_ledgers",
+    "extract_scalars",
+    "fingerprint",
+]

@@ -1,0 +1,166 @@
+"""CLI: ``python -m repro.obsv {doctor,bench-compare}``.
+
+    # judge a traced run: who got flagged, did it match the plant?
+    python -m repro.obsv doctor results/telemetry \\
+        --store results/sweep/store.jsonl --trace results/telemetry/trace.json \\
+        --expect-precision 1.0 --expect-recall 1.0
+
+    # gate a benchmark run against the committed baselines
+    python -m repro.obsv bench-compare results/bench \\
+        --baseline benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .bench import compare_ledgers
+from .doctor import analyze_events, augment_trace, load_events, \
+    summarize_store
+
+
+def _doctor(args) -> int:
+    events, problems = load_events(args.path)
+    report = analyze_events(events, threshold=args.threshold)
+    report["schema_problems"] = problems
+    if args.store:
+        report["store"] = summarize_store(args.store)
+    if args.trace:
+        report["trace"] = augment_trace(args.trace, events,
+                                        out_path=args.trace_out)
+
+    failures = list(problems)
+    failures += report["wire_ledger_mismatch"]
+    runs_with_truth = [r for r in report["runs"]
+                       if r.get("detection") is not None]
+    for r in report["runs"]:
+        for a in r["anomalies"]:
+            line = (f"{r['runtime']}/{r['attack']}/alpha={r['alpha']}: "
+                    f"{a['flag']} — {a['detail']}")
+            if args.fail_on_anomaly:
+                failures.append(line)
+    if args.expect_precision is not None or args.expect_recall is not None:
+        if not runs_with_truth:
+            failures.append("--expect-precision/--expect-recall given but "
+                            "no run carries byzantine_true ground truth")
+        for r in runs_with_truth:
+            det = r["detection"]
+            where = (f"{r['runtime']}/{r['attack']}/alpha={r['alpha']}")
+            if (args.expect_precision is not None
+                    and det["precision"] < args.expect_precision):
+                failures.append(
+                    f"{where}: precision {det['precision']:.3f} < "
+                    f"expected {args.expect_precision} "
+                    f"(flagged={r['flagged']}, truth={r['byzantine_true']})")
+            if (args.expect_recall is not None
+                    and det["recall"] < args.expect_recall):
+                failures.append(
+                    f"{where}: recall {det['recall']:.3f} < "
+                    f"expected {args.expect_recall} "
+                    f"(flagged={r['flagged']}, truth={r['byzantine_true']})")
+
+    if args.json:
+        print(json.dumps(report, indent=1))
+    else:
+        print(f"[doctor] {report['n_events']} events, "
+              f"{report['n_runs']} run(s)")
+        for r in report["runs"]:
+            det = r.get("detection")
+            det_str = (f" precision={det['precision']:.2f} "
+                       f"recall={det['recall']:.2f}" if det else "")
+            anom = ("" if not r["anomalies"] else
+                    " anomalies=" + ",".join(a["flag"]
+                                             for a in r["anomalies"]))
+            print(f"[doctor]   {r['runtime']}/{r['attack']}"
+                  f"/alpha={r['alpha']}: {r['n_rounds']} rounds, "
+                  f"flagged={r['flagged']} ({r['method']})"
+                  f"{det_str}{anom}")
+        if report["wire_ledger_mismatch"]:
+            for p in report["wire_ledger_mismatch"]:
+                print(f"[doctor]   wire_ledger_mismatch: {p}")
+        else:
+            print("[doctor]   wire ledger: exact")
+        if args.store:
+            s = report["store"]
+            print(f"[doctor]   store {s['path']}: {s['n_ok']}/"
+                  f"{s['n_cells']} cells ok")
+        if args.trace:
+            print(f"[doctor]   per-worker tracks -> {report['trace']}")
+    for f_line in failures:
+        print(f"[doctor] FAIL: {f_line}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def _bench_compare(args) -> int:
+    problems, warnings, n = compare_ledgers(
+        args.current, args.baseline,
+        bits_ratio=args.bits_ratio, rounds_ratio=args.rounds_ratio,
+        check_times=args.check_times, strict=args.strict,
+    )
+    print(f"[bench-compare] {n} scalars compared against {args.baseline}")
+    for w in warnings:
+        print(f"[bench-compare] warning: {w}")
+    for p in problems:
+        print(f"[bench-compare] FAIL: {p}", file=sys.stderr)
+    if not problems:
+        print("[bench-compare] no regressions")
+    return 1 if problems else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obsv")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_doc = sub.add_parser(
+        "doctor", help="run-health report over a telemetry stream")
+    p_doc.add_argument("path",
+                       help="telemetry dir (containing events.jsonl) or "
+                            "an events.jsonl path")
+    p_doc.add_argument("--store", default=None,
+                       help="join this sweep ResultStore (store.jsonl) "
+                            "into the report")
+    p_doc.add_argument("--trace", default=None,
+                       help="append per-worker suspicion tracks to this "
+                            "Perfetto trace.json")
+    p_doc.add_argument("--trace-out", default=None,
+                       help="write the augmented trace here instead of "
+                            "in place")
+    p_doc.add_argument("--threshold", type=float, default=0.5,
+                       help="suspicion level that flags a worker "
+                            "(default 0.5)")
+    p_doc.add_argument("--expect-precision", type=float, default=None,
+                       help="fail unless every ground-truthed run's "
+                            "flagged-set precision is >= this")
+    p_doc.add_argument("--expect-recall", type=float, default=None,
+                       help="fail unless every ground-truthed run's "
+                            "flagged-set recall is >= this")
+    p_doc.add_argument("--fail-on-anomaly", action="store_true",
+                       help="exit nonzero when any run carries an "
+                            "anomaly flag")
+    p_doc.add_argument("--json", action="store_true",
+                       help="print the full report as JSON")
+    p_doc.set_defaults(fn=_doctor)
+
+    p_cmp = sub.add_parser(
+        "bench-compare",
+        help="diff benchmark ledgers against committed baselines")
+    p_cmp.add_argument("current", help="dir of BENCH_<name>.json ledgers "
+                                       "from the run under test")
+    p_cmp.add_argument("--baseline", default="benchmarks/baselines",
+                       help="dir of committed baseline ledgers")
+    p_cmp.add_argument("--bits-ratio", type=float, default=1.5)
+    p_cmp.add_argument("--rounds-ratio", type=float, default=2.0)
+    p_cmp.add_argument("--check-times", action="store_true",
+                       help="also gate wall-clock (off by default: CI "
+                            "hosts are not comparable)")
+    p_cmp.add_argument("--strict", action="store_true",
+                       help="promote missing-entry warnings to failures")
+    p_cmp.set_defaults(fn=_bench_compare)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

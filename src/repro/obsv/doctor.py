@@ -1,0 +1,252 @@
+"""The run-health doctor: judge a telemetry stream, don't just store it.
+
+A telemetry directory accumulates round records from any number of runs
+(a quickstart, a sweep's cells, an example script).  The doctor segments
+the stream back into runs, and for each run answers the forensic
+question the schema-v4 fields exist for: **which workers does the
+evidence accuse, and does that match the attack that was actually
+planted?**
+
+* a **run** is a maximal stretch of ``kind == "round"`` events whose
+  ``step`` increases and whose identity ``(pid, runtime, attack,
+  alpha)`` is constant — step resets and identity changes both start a
+  new run (robust to many runs appended to one events.jsonl);
+* the **flagged set** is read from the last round's ``suspicion`` vector
+  (EWMA, see :class:`repro.telemetry.SuspicionTracker`) at a threshold;
+  v1–v3 streams (no per-worker fields) fall back to rejection frequency
+  over the run's ``rejected`` lists — degraded but never useless;
+* **precision/recall** compare the flagged set against the planted
+  ground truth (``byzantine_true``, emitted whenever the attack rule is
+  live).  Runs without ground truth report flagged-only;
+* **anomaly flags**: ``no_saddle_escape`` (a saddle-pushing attack run
+  that never crossed below the problem's saddle value),
+  ``loss_divergence`` (non-finite loss/grad anywhere),
+  ``ef_divergence`` (a negative measured δ̂ — the error-feedback
+  contract broke), and the stream-global ``wire_ledger_mismatch``
+  (re-using the validator's exact-int wire check);
+* the existing Perfetto trace gains one named **per-worker track** per
+  run (thread-name metadata + a ``ph: "C"`` suspicion counter series),
+  so the forensic timeline sits next to the spans the runtimes already
+  emit.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Optional
+
+from ..telemetry.__main__ import check_wire_exactness
+from ..telemetry.schema import validate_stream
+
+#: per-worker Perfetto tracks use tids far above any real thread id hash
+_WORKER_TID_BASE = 0x10000
+
+
+def load_events(path: str):
+    """Load ``events.jsonl`` (or a telemetry dir containing one).
+
+    Returns ``(events, problems)`` — schema violations are reported, not
+    raised, so the doctor can still judge a partially bad stream."""
+    if os.path.isdir(path):
+        path = os.path.join(path, "events.jsonl")
+    if not os.path.exists(path):
+        return [], [f"{path}: no such file"]
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    problems = [f"line {ln}: {msg}" for ln, msg in validate_stream(lines)]
+    events = []
+    for ln in lines:
+        try:
+            events.append(json.loads(ln))
+        except json.JSONDecodeError:
+            pass  # already reported by validate_stream
+    return events, problems
+
+
+def group_runs(events: list) -> list:
+    """Segment the stream's round records into runs (see module doc).
+
+    Returns a list of ``{"runtime", "attack", "alpha", "pid",
+    "rounds": [...]}`` in stream order."""
+    runs = []
+    cur = None
+    for ev in events:
+        if ev.get("kind") != "round":
+            continue
+        ident = (ev.get("pid"), ev.get("runtime"), ev.get("attack"),
+                 ev.get("alpha"))
+        step = ev.get("step", 0)
+        if (cur is None or ident != cur["_ident"]
+                or step <= cur["rounds"][-1].get("step", -1)):
+            cur = {"_ident": ident, "pid": ident[0], "runtime": ident[1],
+                   "attack": ident[2], "alpha": ident[3], "rounds": []}
+            runs.append(cur)
+        cur["rounds"].append(ev)
+    for r in runs:
+        r.pop("_ident")
+    return runs
+
+
+def flagged_workers(run: dict, threshold: float = 0.5):
+    """The worker ids this run's evidence accuses.
+
+    Schema-v4 runs: ids whose FINAL suspicion ≥ ``threshold``.  Older
+    streams: ids rejected in ≥ half the rounds that recorded a
+    ``rejected`` list.  Returns ``(flagged_ids, method)``."""
+    rounds = run["rounds"]
+    for ev in reversed(rounds):
+        susp = ev.get("suspicion")
+        if susp is not None:
+            return ([i for i, s in enumerate(susp) if s >= threshold],
+                    "suspicion")
+    counts: dict[int, int] = {}
+    n = 0
+    for ev in rounds:
+        rej = ev.get("rejected")
+        if rej is None:
+            continue
+        n += 1
+        for i in rej:
+            counts[i] = counts.get(i, 0) + 1
+    if n == 0:
+        return [], "none"
+    return (sorted(i for i, c in counts.items() if c / n >= 0.5),
+            "rejection_frequency")
+
+
+def detection_metrics(flagged, truth) -> dict:
+    """Precision/recall of a flagged-worker set against the planted
+    Byzantine ids (both empty ⇒ perfect: nothing to find, nothing
+    accused)."""
+    flagged, truth = set(flagged), set(truth)
+    tp = len(flagged & truth)
+    precision = tp / len(flagged) if flagged else (1.0 if not truth else 0.0)
+    recall = tp / len(truth) if truth else 1.0
+    return {"precision": precision, "recall": recall,
+            "true_positives": tp, "false_positives": len(flagged - truth),
+            "false_negatives": len(truth - flagged)}
+
+
+def run_anomalies(run: dict) -> list:
+    """Per-run anomaly flags (see module doc)."""
+    rounds = run["rounds"]
+    flags = []
+    attack = run.get("attack") or "none"
+    if "saddle" in attack and rounds \
+            and not any(ev.get("saddle_escape") for ev in rounds):
+        flags.append({
+            "flag": "no_saddle_escape",
+            "detail": f"attack {attack!r} ran {len(rounds)} rounds "
+                      f"without ever crossing below the saddle value",
+        })
+    bad_loss = [ev.get("step") for ev in rounds
+                if any(v is not None and not math.isfinite(v)
+                       for v in (ev.get("loss"), ev.get("grad_norm")))]
+    if bad_loss:
+        flags.append({
+            "flag": "loss_divergence",
+            "detail": f"non-finite loss/grad_norm at steps {bad_loss[:5]}",
+        })
+    neg_delta = [ev.get("step") for ev in rounds
+                 if ev.get("uplink_delta") is not None
+                 and ev["uplink_delta"] < 0.0]
+    if neg_delta:
+        flags.append({
+            "flag": "ef_divergence",
+            "detail": f"negative measured δ̂ at steps {neg_delta[:5]} — "
+                      f"the compressed update moved AWAY from what was "
+                      f"sent (error feedback diverging)",
+        })
+    return flags
+
+
+def analyze_events(events: list, *, threshold: float = 0.5) -> dict:
+    """The full report over one loaded stream."""
+    runs = group_runs(events)
+    report_runs = []
+    for run in runs:
+        flagged, method = flagged_workers(run, threshold)
+        truth = None
+        for ev in reversed(run["rounds"]):
+            if ev.get("byzantine_true") is not None:
+                truth = ev["byzantine_true"]
+                break
+        entry = {
+            "runtime": run["runtime"], "attack": run["attack"],
+            "alpha": run["alpha"], "n_rounds": len(run["rounds"]),
+            "flagged": flagged, "method": method,
+            "byzantine_true": truth,
+            "anomalies": run_anomalies(run),
+        }
+        if truth is not None:
+            entry["detection"] = detection_metrics(flagged, truth)
+        report_runs.append(entry)
+    wire_problems = check_wire_exactness(events) \
+        if any(e.get("kind") == "ledger" for e in events) else []
+    return {
+        "n_events": len(events),
+        "n_runs": len(report_runs),
+        "runs": report_runs,
+        "wire_ledger_mismatch": wire_problems,
+    }
+
+
+def summarize_store(store_path: str) -> dict:
+    """Join a sweep ResultStore into the report: cell counts plus the
+    failed cells' specs (the doctor's 'what broke' section)."""
+    from ..sweep.store import ResultStore
+
+    store = ResultStore(store_path)
+    records = store.records()
+    failed = [r for r in records if r.get("status") != "ok"]
+    return {
+        "path": store_path,
+        "n_cells": len(records),
+        "n_ok": len(records) - len(failed),
+        "failed": [{"hash": r.get("hash"), "spec": r.get("spec"),
+                    "status": r.get("status")} for r in failed[:20]],
+    }
+
+
+def augment_trace(trace_path: str, events: list,
+                  out_path: Optional[str] = None) -> str:
+    """Append per-worker forensic tracks to an existing Perfetto trace.
+
+    For every run with suspicion vectors: one thread-name metadata event
+    per worker (``worker <i> [<runtime>/<attack>]``) plus a ``ph: "C"``
+    counter series of that worker's suspicion over the run — rendered by
+    Perfetto as per-worker counter tracks beside the runtime's spans.
+    Writes ``out_path`` (default: overwrite in place) and returns it."""
+    with open(trace_path) as f:
+        doc = json.load(f)
+    trace_events = doc.setdefault("traceEvents", [])
+    named = set()
+    for run in group_runs(events):
+        label = f"{run['runtime']}/{run.get('attack') or 'none'}"
+        for ev in run["rounds"]:
+            susp = ev.get("suspicion")
+            if susp is None:
+                continue
+            pid = ev.get("pid", 0)
+            ts = round(float(ev.get("ts", 0.0)) * 1e6, 3)
+            for i, s in enumerate(susp):
+                tid = _WORKER_TID_BASE + i
+                if (pid, tid, label) not in named:
+                    named.add((pid, tid, label))
+                    trace_events.append({
+                        "name": "thread_name", "ph": "M", "ts": 0,
+                        "pid": pid, "tid": tid,
+                        "args": {"name": f"worker {i} [{label}]"},
+                    })
+                trace_events.append({
+                    "name": f"suspicion.w{i}", "ph": "C", "ts": ts,
+                    "pid": pid, "tid": tid,
+                    "args": {"suspicion": s},
+                })
+    out_path = out_path or trace_path
+    tmp = f"{out_path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f)
+    os.replace(tmp, out_path)
+    return out_path

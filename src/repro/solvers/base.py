@@ -26,8 +26,10 @@ from ..comm import VectorChannel, WireLedger
 from ..compression import AdaptiveTopK
 from ..telemetry import (
     RoundRecord,
+    SuspicionTracker,
     compile_scope,
     get_telemetry,
+    planted_byzantine_ids,
     record_retrace,
     rejected_from_keep,
 )
@@ -170,9 +172,34 @@ class FirstOrderSolver:
                 "truncated": False}
 
     def _emit_round(self, tel, *, step, loss, gn, prev_loss, delta_hat,
-                    k_live, k_changed, escaped, keep, bps):
+                    k_live, k_changed, escaped, info, bps, tracker=None):
         if not tel.enabled:
             return
+        keep = info["keep"]
+        fields = {}
+        if tracker is not None:
+            # schema-v4 per-worker forensics (host-side; the traced round
+            # only stages the extra outputs when telemetry was enabled at
+            # trace time, see the subclasses' _round_impl gates)
+            m = tracker.m
+            keep_l = [float(k) for k in keep]
+            norms = info.get("update_norms")
+            norms_l = ([float(n) for n in norms]
+                       if norms is not None else None)
+            fields = {
+                "worker_bits": [bps["uplink"] // m] * m,
+                "worker_keep": keep_l,
+                "suspicion": tracker.update(keep=keep_l, norms=norms_l),
+            }
+            if norms_l is not None:
+                fields["worker_norms"] = norms_l
+            if info.get("worker_delta") is not None:
+                fields["worker_delta"] = [float(x)
+                                          for x in info["worker_delta"]]
+            if self._attack_rule.kind != "none":
+                fields["byzantine_true"] = planted_byzantine_ids(
+                    m, self._attack_rule.alpha
+                )
         tel.round(RoundRecord(
             step=step, runtime=self.runtime_label, loss=loss, grad_norm=gn,
             model_decrease=(None if prev_loss is None else prev_loss - loss),
@@ -183,6 +210,7 @@ class FirstOrderSolver:
             alpha=self._attack_rule.alpha,
             wire_uplink_bits=bps["uplink"],
             wire_downlink_bits=bps["downlink"],
+            **fields,
         ), name=f"{self.runtime_label}.round")
 
     def _jit_round(self, *args):

@@ -33,6 +33,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..telemetry import SuspicionTracker
 from .base import FirstOrderParams, FirstOrderSolver
 
 
@@ -65,18 +66,35 @@ class ChannelByzantinePGD(FirstOrderSolver):
         # step, so one spec means one attack across the solver axis)
         y_used = self._attack_rule.corrupt_labels(k_label, y)
         g = self._per_worker_grads(w, X, y_used)
-        g, new_state["uplink"], delta = self.uplink.transmit(
-            g, state["uplink"], key=k_comp, attack_key=k_update,
-            measure=True,
-        )
+        # forensics (schema v4): stage per-sender δ̂ and update norms only
+        # when telemetry was enabled at trace time — the disabled round
+        # compiles to the exact pre-forensics HLO
+        forensics = self._telemetry().enabled
+        if forensics:
+            g, new_state["uplink"], delta, worker_delta = \
+                self.uplink.transmit(
+                    g, state["uplink"], key=k_comp, attack_key=k_update,
+                    measure=True, per_sender=True,
+                )
+        else:
+            g, new_state["uplink"], delta = self.uplink.transmit(
+                g, state["uplink"], key=k_comp, attack_key=k_update,
+                measure=True,
+            )
         agg, keep = self.aggregator(g)
         step, new_state["downlink"] = self.downlink.transmit(
             -p.lr * agg, state["downlink"], key=k_down
         )
-        return w + step, new_state, {
+        info = {
             "keep": keep, "uplink_delta": delta,
             "agg_norm": jnp.linalg.norm(agg),
         }
+        if forensics:
+            info["worker_delta"] = worker_delta
+            info["update_norms"] = jnp.linalg.norm(
+                g.reshape(g.shape[0], -1), axis=-1
+            )
+        return w + step, new_state, info
 
     # -- the Escape sub-routine -----------------------------------------
     def _escape(self, w, state, X, y, key, budget, lossf, Xf, yf, f0):
@@ -128,6 +146,7 @@ class ChannelByzantinePGD(FirstOrderSolver):
         hist["escape_rounds"] = 0
         tel = self._telemetry()
         prev_loss = float(lossf(w0, Xf, yf)) if tel.enabled else None
+        tracker = SuspicionTracker(X.shape[0]) if tel.enabled else None
         trigger = grad_tol if grad_tol is not None else self.params.grad_th
 
         w = w0
@@ -163,8 +182,8 @@ class ChannelByzantinePGD(FirstOrderSolver):
             self._emit_round(tel, step=t, loss=loss, gn=gn,
                              prev_loss=prev_loss, delta_hat=delta_hat,
                              k_live=k_live, k_changed=k_changed,
-                             escaped=escaped_saddle, keep=info["keep"],
-                             bps=bps)
+                             escaped=escaped_saddle, info=info,
+                             bps=bps, tracker=tracker)
             prev_loss = loss
             t += 1
             if gn <= trigger:

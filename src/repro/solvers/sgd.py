@@ -26,6 +26,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..telemetry import SuspicionTracker
 from .base import FirstOrderParams, FirstOrderSolver
 
 
@@ -50,10 +51,21 @@ class CompressedSGD(FirstOrderSolver):
 
         y_used = self._attack_rule.corrupt_labels(k_label, y)
         g = self._per_worker_grads(w, X, y_used)
-        g, new_state["uplink"], delta = self.uplink.transmit(
-            g, state["uplink"], key=k_comp, attack_key=k_update,
-            measure=True,
-        )
+        # forensics (schema v4): per-sender δ̂ + update norms staged only
+        # when telemetry was enabled at trace time — the degenerate-parity
+        # contract (disabled round ≡ reference HLO) is untouched
+        forensics = self._telemetry().enabled
+        if forensics:
+            g, new_state["uplink"], delta, worker_delta = \
+                self.uplink.transmit(
+                    g, state["uplink"], key=k_comp, attack_key=k_update,
+                    measure=True, per_sender=True,
+                )
+        else:
+            g, new_state["uplink"], delta = self.uplink.transmit(
+                g, state["uplink"], key=k_comp, attack_key=k_update,
+                measure=True,
+            )
         agg, keep = self.aggregator(g)
         # static gates: the degenerate round must be the reference HLO,
         # not a `+ 0.0 * noise` perturbation of it
@@ -68,9 +80,13 @@ class CompressedSGD(FirstOrderSolver):
         step, new_state["downlink"] = self.downlink.transmit(
             step, state["downlink"], key=k_down
         )
-        return w + step, v_new, new_state, {
-            "keep": keep, "uplink_delta": delta,
-        }
+        info = {"keep": keep, "uplink_delta": delta}
+        if forensics:
+            info["worker_delta"] = worker_delta
+            info["update_norms"] = jnp.linalg.norm(
+                g.reshape(g.shape[0], -1), axis=-1
+            )
+        return w + step, v_new, new_state, info
 
     # -- host loop -------------------------------------------------------
     def run(self, w0, X, y, n_steps, key=None, eval_fn=None,
@@ -89,6 +105,7 @@ class CompressedSGD(FirstOrderSolver):
         hist = self._fresh_hist()
         tel = self._telemetry()
         prev_loss = float(lossf(w0, Xf, yf)) if tel.enabled else None
+        tracker = SuspicionTracker(X.shape[0]) if tel.enabled else None
 
         w = w0
         v = jnp.zeros_like(w0)
@@ -126,7 +143,8 @@ class CompressedSGD(FirstOrderSolver):
             self._emit_round(tel, step=t, loss=loss, gn=gn,
                              prev_loss=prev_loss, delta_hat=delta_hat,
                              k_live=k_live, k_changed=k_changed,
-                             escaped=escaped, keep=info["keep"], bps=bps)
+                             escaped=escaped, info=info, bps=bps,
+                             tracker=tracker)
             prev_loss = loss
             if hit_tol:
                 break

@@ -19,6 +19,7 @@ from .compile import (
     record_retrace,
 )
 from .core import ENV_DIR, Telemetry, device_event, get_telemetry
+from .forensics import SuspicionTracker, planted_byzantine_ids
 from .records import RoundRecord, rejected_from_keep
 from .schema import (
     EVENT_SCHEMA,
@@ -41,6 +42,8 @@ __all__ = [
     "get_telemetry",
     "RoundRecord",
     "rejected_from_keep",
+    "SuspicionTracker",
+    "planted_byzantine_ids",
     "EVENT_SCHEMA",
     "KINDS",
     "SCHEMA_VERSION",

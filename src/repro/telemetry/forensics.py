@@ -1,0 +1,138 @@
+"""Per-worker suspicion scores — the forensic attribution layer.
+
+:class:`SuspicionTracker` turns the per-round facts every runtime
+already surfaces host-side (the aggregator's keep mask and the
+per-worker update norms) into one EWMA **suspicion score** per worker,
+following the history-based concentration idea of Allen-Zhu et al. 2020
+(arXiv 2012.14368): a Byzantine worker betrays itself by *persistent*
+deviation — it keeps getting rejected, or its update norm keeps leaving
+the concentration band of its own past behaviour — while an honest
+worker's occasional rejection (e.g. the β·m rank cut clipping the
+largest honest norm once) decays away.
+
+Two per-round signals, combined as a max and folded into the EWMA:
+
+* **rejection** — ``1 − keep_i`` (soft keep masks contribute
+  fractionally).  Skipped for selection-style rules (krum's one-hot
+  keep rejects m−1 workers a round; rejection frequency carries no
+  information there, detected as "more than half rejected");
+* **norm z-score** — ``|norm_i − mean_i| / std_i`` against the worker's
+  OWN running history (Welford, history *before* this round), clipped
+  to [0, 1] at ``z_clip`` and then scaled by ``z_weight`` (< the 0.5
+  default flag threshold).  Needs ≥ 3 prior observations.
+
+The asymmetry is deliberate: an honest worker's norms drift as the run
+converges, so the z-signal alone carries persistent low-level noise —
+capping it at ``z_weight`` means z-evidence alone can never cross the
+default 0.5 flag line (use a lower ``flagged`` threshold to hunt by
+norms, e.g. under krum where rejection is uninformative), while a
+worker the aggregator persistently rejects saturates toward 1.  A
+non-finite norm is maximal evidence regardless.
+
+The tracker is pure host-side bookkeeping: the runtimes construct one
+only when telemetry is enabled and feed it concrete per-round values —
+nothing here is ever traced, so the zero-cost-when-disabled contract is
+untouched.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+
+class SuspicionTracker:
+    """EWMA suspicion per worker over one run (host-side, never traced).
+
+    ``update(keep=…, norms=…)`` consumes one round and returns the m
+    current scores (floats in [0, 1]).  ``None`` entries in ``keep`` /
+    ``norms`` mean "worker did not participate this round" — its score
+    and history are left untouched.
+    """
+
+    def __init__(self, m: int, *, ewma: float = 0.3, z_clip: float = 3.0,
+                 z_weight: float = 0.4, min_history: int = 3):
+        if not 0.0 < ewma <= 1.0:
+            raise ValueError(f"ewma must be in (0, 1], got {ewma!r}")
+        self.m = int(m)
+        self.ewma = float(ewma)
+        self.z_clip = float(z_clip)
+        self.z_weight = float(z_weight)
+        self.min_history = int(min_history)
+        self.scores = [0.0] * self.m
+        # Welford running stats of each worker's own update-norm history
+        self._n = [0] * self.m
+        self._mean = [0.0] * self.m
+        self._m2 = [0.0] * self.m
+
+    # -- the two signals -----------------------------------------------
+    def _z_signal(self, i: int, norm: float) -> float:
+        """Deviation of this round's norm from worker i's own history
+        (computed BEFORE the norm enters the history)."""
+        if self._n[i] < self.min_history:
+            return 0.0
+        var = self._m2[i] / (self._n[i] - 1)
+        std = math.sqrt(var) if var > 0 else 0.0
+        if std <= 0.0:
+            # degenerate flat history: any deviation is maximal
+            return 0.0 if norm == self._mean[i] else 1.0
+        z = abs(norm - self._mean[i]) / std
+        return min(1.0, z / self.z_clip)
+
+    def _push_history(self, i: int, norm: float) -> None:
+        self._n[i] += 1
+        delta = norm - self._mean[i]
+        self._mean[i] += delta / self._n[i]
+        self._m2[i] += delta * (norm - self._mean[i])
+
+    # -- one round ------------------------------------------------------
+    def update(self, *, keep: Optional[Sequence] = None,
+               norms: Optional[Sequence] = None) -> list:
+        """Fold one round's keep mask / update norms into the scores.
+
+        ``keep[i]`` is the aggregator's keep weight (1 kept, 0 rejected,
+        fractional for soft masks), ``norms[i]`` the worker's update
+        norm; ``None`` entries skip that worker.  Returns the m scores.
+        """
+        keep = list(keep) if keep is not None else [None] * self.m
+        norms = list(norms) if norms is not None else [None] * self.m
+        if len(keep) != self.m or len(norms) != self.m:
+            raise ValueError(
+                f"keep/norms must have length m={self.m}, got "
+                f"{len(keep)}/{len(norms)}"
+            )
+        # a selection rule (krum) keeps one worker and "rejects" the
+        # rest — rejection frequency is uninformative, use z-scores only
+        live = [k for k in keep if k is not None]
+        selection_rule = (
+            live and sum(1.0 - min(1.0, max(0.0, float(k))) for k in live)
+            > len(live) / 2
+        )
+        for i in range(self.m):
+            k_i, n_i = keep[i], norms[i]
+            if k_i is None and n_i is None:
+                continue   # did not participate: score + history untouched
+            signal = 0.0
+            if k_i is not None and not selection_rule:
+                signal = 1.0 - min(1.0, max(0.0, float(k_i)))
+            if n_i is not None:
+                n_i = float(n_i)
+                if math.isfinite(n_i):
+                    signal = max(signal,
+                                 self.z_weight * self._z_signal(i, n_i))
+                    self._push_history(i, n_i)
+                else:
+                    signal = 1.0   # non-finite update: maximally suspect
+            self.scores[i] = ((1.0 - self.ewma) * self.scores[i]
+                              + self.ewma * signal)
+        return list(self.scores)
+
+    def flagged(self, threshold: float = 0.5) -> list:
+        """Worker ids whose current suspicion is ≥ ``threshold``."""
+        return [i for i, s in enumerate(self.scores) if s >= threshold]
+
+
+def planted_byzantine_ids(m: int, alpha: float) -> list:
+    """The ground-truth Byzantine worker set the attack hook plants:
+    :func:`repro.core.attacks.byzantine_mask` corrupts the FIRST
+    ``int(alpha · m)`` workers, deterministically."""
+    return list(range(int(float(alpha) * int(m))))

@@ -43,6 +43,16 @@ class RoundRecord:
     queue_depth: Optional[int] = None          # still in flight after round
     participation: Optional[float] = None      # configured cohort fraction
     arrival_staleness: Optional[Sequence[int]] = None  # per-arrival ages
+    # per-worker forensic fields (schema v4; every list is indexed by
+    # worker id 0 … m−1 — None entries mean "did not participate/arrive
+    # this round", a whole-field None means the runtime has no view):
+    worker_bits: Optional[Sequence[int]] = None     # exact uplink bits paid
+    worker_delta: Optional[Sequence] = None         # measured per-worker δ̂
+    worker_keep: Optional[Sequence] = None          # aggregator keep weight
+    worker_norms: Optional[Sequence] = None         # update norms
+    worker_staleness: Optional[Sequence] = None     # arrival age (async)
+    suspicion: Optional[Sequence[float]] = None     # EWMA suspicion ∈ [0, 1]
+    byzantine_true: Optional[Sequence[int]] = None  # planted Byzantine ids
 
     def to_fields(self) -> dict:
         """Flatten to JSONL event fields (``None`` dropped, floats
@@ -75,6 +85,20 @@ class RoundRecord:
             out["participation"] = float(self.participation)
         if self.arrival_staleness is not None:
             out["arrival_staleness"] = [int(a) for a in self.arrival_staleness]
+        if self.worker_bits is not None:
+            out["worker_bits"] = [int(b) for b in self.worker_bits]
+        for key in ("worker_delta", "worker_keep", "worker_norms"):
+            v = getattr(self, key)
+            if v is not None:
+                out[key] = [None if x is None else float(x) for x in v]
+        if self.worker_staleness is not None:
+            out["worker_staleness"] = [None if a is None else int(a)
+                                       for a in self.worker_staleness]
+        if self.suspicion is not None:
+            out["suspicion"] = [min(1.0, max(0.0, float(s)))
+                                for s in self.suspicion]
+        if self.byzantine_true is not None:
+            out["byzantine_true"] = [int(i) for i in self.byzantine_true]
         return out
 
 

@@ -26,7 +26,16 @@ Per-kind required keys (on top of the base):
   and ``agg_kernel``, one of ``"sparse"``/``"fused"``/``"dense"``; v3
   adds the async-runtime fields ``cohort_size``/``n_arrivals``/
   ``queue_depth`` (ints ≥ 0), ``participation`` (number), and
-  ``arrival_staleness``, a list of ints ≥ 0 — per-arrival ages)
+  ``arrival_staleness``, a list of ints ≥ 0 — per-arrival ages; v4 adds
+  the per-worker forensic fields, every list indexed by worker id
+  ``0 … m−1``: ``worker_bits`` (ints ≥ 0, exact uplink bits each worker
+  paid this round), ``worker_delta`` (number-or-null, each worker's
+  measured δ̂), ``worker_keep`` (number-or-null, the aggregator's keep
+  weight — null when the worker did not participate/arrive),
+  ``worker_norms`` (number-or-null, update norms), ``worker_staleness``
+  (int ≥ 0 or null, arrival age), ``suspicion`` (numbers in [0, 1], the
+  EWMA suspicion score), and ``byzantine_true`` (ints ≥ 0, the planted
+  Byzantine worker ids the attack hook knows))
 * ``wire``    — ``ledger_id`` (int), ``uplink`` (int ≥ 0),
   ``downlink`` (int ≥ 0), ``rounds`` (int ≥ 0): ONE ledger-record call,
   exact integer bits; v3 adds ``seq`` (int ≥ 0, the ledger generation's
@@ -52,14 +61,14 @@ from __future__ import annotations
 
 from numbers import Number
 
-#: version writers stamp on new events (3: async round fields
-#: ``cohort_size``/``n_arrivals``/``queue_depth``/``participation``/
-#: ``arrival_staleness``; order-insensitive wire accounting via
-#: ``seq``/``pid`` on wire and ``n_records``/``pid`` on ledger events)
-SCHEMA_VERSION = 3
+#: version writers stamp on new events (4: per-worker forensic round
+#: fields ``worker_bits``/``worker_delta``/``worker_keep``/
+#: ``worker_norms``/``worker_staleness``/``suspicion``/
+#: ``byzantine_true``)
+SCHEMA_VERSION = 4
 #: versions the validator accepts — each older version carries a strict
 #: subset of the newer optional fields, so old streams stay valid forever
-ACCEPTED_VERSIONS = (1, 2, 3)
+ACCEPTED_VERSIONS = (1, 2, 3, 4)
 
 KINDS = ("event", "span", "counter", "gauge", "hist", "round", "wire",
          "ledger", "compile")
@@ -99,6 +108,22 @@ EVENT_SCHEMA = {
         "participation": {"type": "number"},
         "arrival_staleness": {"type": "array",
                               "items": {"type": "integer", "minimum": 0}},
+        "worker_bits": {"type": "array",
+                        "items": {"type": "integer", "minimum": 0}},
+        "worker_delta": {"type": "array",
+                         "items": {"type": ["number", "null"]}},
+        "worker_keep": {"type": "array",
+                        "items": {"type": ["number", "null"]}},
+        "worker_norms": {"type": "array",
+                         "items": {"type": ["number", "null"]}},
+        "worker_staleness": {"type": "array",
+                             "items": {"type": ["integer", "null"],
+                                       "minimum": 0}},
+        "suspicion": {"type": "array",
+                      "items": {"type": "number",
+                                "minimum": 0, "maximum": 1}},
+        "byzantine_true": {"type": "array",
+                           "items": {"type": "integer", "minimum": 0}},
     },
     "allOf": [
         {"if": {"properties": {"kind": {"const": "span"}}},
@@ -136,6 +161,31 @@ _NONNEG_INTS = ("step", "ledger_id", "uplink", "downlink", "rounds",
                 "cohort_size", "n_arrivals", "queue_depth")
 
 _AGG_KERNELS = ("sparse", "fused", "dense")
+
+
+def _is_number(v) -> bool:
+    return isinstance(v, Number) and not isinstance(v, bool)
+
+
+def _is_nonneg_int(v) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+#: v4 per-worker list fields → per-item predicate + description
+_WORKER_LISTS = {
+    "worker_bits": (_is_nonneg_int, "non-negative ints"),
+    "worker_delta": (lambda v: v is None or _is_number(v),
+                     "numbers or nulls"),
+    "worker_keep": (lambda v: v is None or _is_number(v),
+                    "numbers or nulls"),
+    "worker_norms": (lambda v: v is None or _is_number(v),
+                     "numbers or nulls"),
+    "worker_staleness": (lambda v: v is None or _is_nonneg_int(v),
+                         "non-negative ints or nulls"),
+    "suspicion": (lambda v: _is_number(v) and 0 <= v <= 1,
+                  "numbers in [0, 1]"),
+    "byzantine_true": (_is_nonneg_int, "non-negative ints"),
+}
 
 
 def validate_event(obj) -> list:
@@ -189,6 +239,12 @@ def validate_event(obj) -> list:
                 for a in ages):
             errors.append("arrival_staleness must be a list of "
                           f"non-negative ints, got {ages!r}")
+    for key, (ok, what) in _WORKER_LISTS.items():
+        if key in obj:
+            vals = obj[key]
+            if not isinstance(vals, list) or not all(ok(v) for v in vals):
+                errors.append(f"{key} must be a list of {what}, "
+                              f"got {vals!r}")
     return errors
 
 

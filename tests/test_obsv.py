@@ -1,0 +1,438 @@
+"""repro.obsv: Byzantine forensics, the run-health doctor, bench ledger.
+
+Pins the PR's acceptance criteria:
+
+* **attribution is exact where it should be** — on a w8a gaussian run at
+  α = 0.2 with a matched trim (β slightly above α), the doctor's
+  flagged-worker set equals the planted Byzantine ids: precision =
+  recall = 1.0, exactly;
+* **forensics stays zero-cost when disabled** — the per-sender δ̂ and
+  update norms are staged into the traced round ONLY when telemetry is
+  enabled at trace time (the info dict pins the gate);
+* **the suspicion score's semantics** — rejection evidence saturates,
+  z-evidence alone stays below the default flag line, selection rules
+  (krum) fall back to z-only, non-finite norms are maximal evidence;
+* **the bench ledger gates** — ``bench-compare`` exits 0 against an
+  identical baseline and 1 against an injected 2× bits regression.
+"""
+import json
+import math
+import os
+
+import pytest
+
+from repro.obsv import (
+    analyze_events,
+    append_ledger,
+    augment_trace,
+    compare_ledgers,
+    detection_metrics,
+    extract_scalars,
+    fingerprint,
+    flagged_workers,
+    group_runs,
+    load_events,
+    run_anomalies,
+)
+from repro.obsv.__main__ import main as obsv_cli
+from repro.telemetry import (
+    SuspicionTracker,
+    Telemetry,
+    planted_byzantine_ids,
+)
+from repro.telemetry.__main__ import (
+    check_chrome_trace,
+    main as telemetry_cli,
+)
+
+
+@pytest.fixture
+def tel(tmp_path, monkeypatch):
+    from repro.telemetry import core
+
+    t = Telemetry()
+    t.enable(str(tmp_path / "telemetry"))
+    monkeypatch.setattr(core, "_GLOBAL", t)
+    yield t
+    t.disable()
+
+
+# ------------------------------------------------ suspicion semantics
+
+
+def test_suspicion_rejection_saturates_and_decays():
+    tr = SuspicionTracker(4)
+    for _ in range(3):
+        scores = tr.update(keep=[0.0, 1.0, 1.0, 1.0])
+    # 3 consecutive rejections cross the default 0.5 flag line
+    assert scores[0] == pytest.approx(1 - 0.7 ** 3)
+    assert tr.flagged() == [0]
+    # …and decay once the worker behaves again
+    for _ in range(10):
+        scores = tr.update(keep=[1.0, 1.0, 1.0, 1.0])
+    assert scores[0] < 0.05 and tr.flagged() == []
+
+
+def test_suspicion_z_evidence_alone_stays_below_default_threshold():
+    """Honest norm drift must not cross the 0.5 line by itself."""
+    tr = SuspicionTracker(2)
+    for i in range(50):
+        tr.update(keep=[1.0, 1.0], norms=[1.0 + 0.01 * i, 1e9 * (i + 1)])
+    assert max(tr.scores) < 0.5
+
+
+def test_suspicion_selection_rule_uses_z_only():
+    """A krum-style one-hot keep rejects m−1 workers a round — rejection
+    frequency carries no information, so it must not raise scores."""
+    tr = SuspicionTracker(5)
+    keep = [1.0, 0.0, 0.0, 0.0, 0.0]
+    for _ in range(10):
+        scores = tr.update(keep=keep, norms=[1.0] * 5)
+    assert max(scores) < 0.5
+
+
+def test_suspicion_nonfinite_norm_is_maximal_evidence():
+    tr = SuspicionTracker(2)
+    scores = tr.update(keep=[1.0, 1.0], norms=[1.0, float("nan")])
+    assert scores[1] == pytest.approx(tr.ewma)  # one round at signal 1.0
+    assert scores[0] == 0.0
+
+
+def test_suspicion_none_means_no_participation():
+    tr = SuspicionTracker(3)
+    tr.update(keep=[0.0, None, 1.0], norms=[1.0, None, 1.0])
+    assert tr.scores[1] == 0.0 and tr._n[1] == 0
+    with pytest.raises(ValueError):
+        tr.update(keep=[1.0])
+
+
+def test_planted_ids_match_attack_mask():
+    import numpy as np
+
+    from repro.core import byzantine_mask
+
+    for m, alpha in ((20, 0.2), (10, 0.25), (7, 0.5), (4, 0.0)):
+        ids = planted_byzantine_ids(m, alpha)
+        mask = np.asarray(byzantine_mask(m, alpha))
+        assert ids == [i for i in range(m) if mask[i]]
+
+
+# ------------------------------------------------ doctor unit pieces
+
+
+def _round(step, runtime="paper", attack="gaussian", alpha=0.2, **kw):
+    ev = {"kind": "round", "name": f"{runtime}.round", "ts": 0.1 * step,
+          "wall": 1.0, "v": 4, "step": step, "runtime": runtime,
+          "attack": attack, "alpha": alpha, "pid": 1}
+    ev.update(kw)
+    return ev
+
+
+def test_group_runs_splits_on_step_reset_and_identity():
+    events = (
+        [_round(t) for t in range(3)]                       # run 1
+        + [_round(t) for t in range(2)]                     # step reset
+        + [_round(t + 2, runtime="async") for t in range(2)]  # new identity
+    )
+    runs = group_runs(events)
+    assert [len(r["rounds"]) for r in runs] == [3, 2, 2]
+    assert [r["runtime"] for r in runs] == ["paper", "paper", "async"]
+
+
+def test_flagged_workers_v4_and_legacy_fallback():
+    v4 = {"rounds": [_round(0, suspicion=[0.9, 0.1, 0.6])]}
+    assert flagged_workers(v4) == ([0, 2], "suspicion")
+    legacy = {"rounds": [_round(t, rejected=[0] if t < 3 else [1])
+                         for t in range(4)]}
+    for ev in legacy["rounds"]:
+        del ev["v"]
+    assert flagged_workers(legacy) == ([0], "rejection_frequency")
+
+
+def test_detection_metrics_edges():
+    perfect = detection_metrics([0, 1], [0, 1])
+    assert perfect["precision"] == 1.0 and perfect["recall"] == 1.0
+    nothing = detection_metrics([], [])
+    assert nothing["precision"] == 1.0 and nothing["recall"] == 1.0
+    assert detection_metrics([0, 5], [0, 1])["precision"] == 0.5
+    assert detection_metrics([0], [0, 1])["recall"] == 0.5
+    assert detection_metrics([3], [])["precision"] == 0.0
+
+
+def test_run_anomaly_flags():
+    saddle_stuck = {"attack": "saddle:5.0", "rounds":
+                    [_round(t, attack="saddle:5.0", saddle_escape=False)
+                     for t in range(4)]}
+    assert [a["flag"] for a in run_anomalies(saddle_stuck)] \
+        == ["no_saddle_escape"]
+    saddle_ok = {"attack": "saddle:5.0", "rounds":
+                 [_round(0, attack="saddle:5.0", saddle_escape=True)]}
+    assert run_anomalies(saddle_ok) == []
+    diverged = {"attack": "none", "rounds":
+                [_round(0, loss=float("inf")),
+                 _round(1, uplink_delta=-0.2)]}
+    flags = [a["flag"] for a in run_anomalies(diverged)]
+    assert flags == ["loss_divergence", "ef_divergence"]
+
+
+# ------------------------------------ the acceptance pin: exact recovery
+
+
+def test_doctor_w8a_gaussian_recovers_planted_set_exactly(tel):
+    """w8a at α = 0.2 (m = 20 ⇒ Byzantine {0,1,2,3}), β = 0.22 ⇒ the
+    trim rejects exactly 4 workers/round: the doctor's flagged set must
+    equal the planted ids — precision = recall = 1.0, pinned."""
+    from repro.api import ExperimentSpec
+
+    exp = ExperimentSpec(
+        problem="w8a-logistic", m_workers=20, M=10.0,
+        aggregator="norm_trim:0.22", attack="gaussian", alpha=0.2, seed=0,
+    ).build()
+    exp.run(n_steps=5)
+    tel.flush()
+
+    events, problems = load_events(tel.out_dir)
+    assert problems == []
+    report = analyze_events(events)
+    assert report["n_runs"] == 1
+    run = report["runs"][0]
+    assert run["byzantine_true"] == [0, 1, 2, 3]
+    assert run["flagged"] == [0, 1, 2, 3]
+    assert run["method"] == "suspicion"
+    det = run["detection"]
+    assert det["precision"] == 1.0 and det["recall"] == 1.0
+    assert report["wire_ledger_mismatch"] == []
+    # the doctor CLI agrees, with teeth
+    rc = obsv_cli(["doctor", tel.out_dir, "--expect-precision", "1.0",
+                   "--expect-recall", "1.0"])
+    assert rc == 0
+
+
+def test_doctor_cli_fails_on_missed_recall(tmp_path):
+    events = [_round(t, suspicion=[0.0] * 4, byzantine_true=[0])
+              for t in range(3)]
+    p = tmp_path / "events.jsonl"
+    p.write_text("".join(json.dumps(e) + "\n" for e in events))
+    assert obsv_cli(["doctor", str(p), "--expect-recall", "1.0"]) == 1
+    assert obsv_cli(["doctor", str(p)]) == 0  # no expectation, no failure
+
+
+def test_doctor_augments_trace_with_worker_tracks(tel, tmp_path):
+    from repro.api import ExperimentSpec
+
+    exp = ExperimentSpec(
+        problem="synthetic-logistic:120:12", m_workers=4,
+        aggregator="norm_trim:0.3", attack="gaussian", alpha=0.25,
+    ).build()
+    exp.run(n_steps=3)
+    tel.flush()
+    trace = os.path.join(tel.out_dir, "trace.json")
+    events, _ = load_events(tel.out_dir)
+    out = augment_trace(trace, events,
+                        out_path=str(tmp_path / "augmented.json"))
+    assert check_chrome_trace(out) == []
+    with open(out) as f:
+        doc = json.load(f)
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("ph") == "M"}
+    assert any(n.startswith("worker 0 [paper/gaussian") for n in names)
+    counters = [e for e in doc["traceEvents"]
+                if e.get("ph") == "C" and e["name"].startswith("suspicion.")]
+    assert len(counters) == 3 * 4  # rounds × workers
+
+
+# ------------------------------------------- zero-cost trace-time gate
+
+
+def test_forensic_outputs_gated_on_telemetry(tel, monkeypatch):
+    """The per-sender δ̂ / update norms are staged only when telemetry
+    was enabled at trace time — the disabled program is the pre-v4 one."""
+    import jax
+
+    from repro.solvers.sgd import CompressedSGD, SGDParams
+
+    def make():
+        from repro.api.problems import make_problem
+        prob = make_problem("synthetic-logistic:120:12", m_workers=4)
+        s = CompressedSGD(prob.loss_fn, SGDParams(lr=0.5, compressor="topk:4",
+                                                  error_feedback="ef21"))
+        s._ensure_channels(prob.dim, 4)
+        key = jax.random.PRNGKey(0)
+        w, v, st, info = s._round_impl(
+            prob.w0, jax.numpy.zeros_like(prob.w0), s.init_comm_state(),
+            prob.X_workers, prob.y_workers, key)
+        return info
+
+    info_on = make()
+    assert "worker_delta" in info_on and "update_norms" in info_on
+    assert info_on["worker_delta"].shape == (4,)
+
+    from repro.telemetry import core
+    monkeypatch.setattr(core, "_GLOBAL", Telemetry())  # disabled
+    info_off = make()
+    assert "worker_delta" not in info_off
+    assert "update_norms" not in info_off
+
+
+# --------------------------- satellite: solver streams validate exactly
+
+
+def test_pgd_and_sgd_streams_validate_with_wire_check(tel, capsys):
+    """byzantine_pgd (incl. escape-probe rounds) and compressed_sgd
+    telemetry streams pass `python -m repro.telemetry validate
+    --check-wire`."""
+    from repro.api import ExperimentSpec
+
+    pgd = ExperimentSpec(
+        problem="matrix-factor:6:2", m_workers=4, eta=0.05,
+        solver="byzantine_pgd", aggregator="norm_trim:0.3",
+        attack="gaussian", alpha=0.25, seed=0,
+    ).build()
+    # a tight grad_tol arms the Escape subroutine, so probe rounds are
+    # in the stream (billed with label="escape")
+    pgd.run(12, grad_tol=1.0)
+    sgd = ExperimentSpec(
+        problem="synthetic-logistic:120:12", m_workers=4, eta=0.5,
+        solver="compressed_sgd", compressor="topk:4",
+        error_feedback="ef21", aggregator="norm_trim:0.3",
+        attack="gaussian", alpha=0.25, seed=0,
+    ).build()
+    sgd.run(6)
+    tel.flush()
+    events_path = os.path.join(tel.out_dir, "events.jsonl")
+    assert telemetry_cli(["validate", events_path, "--check-wire",
+                          "--trace",
+                          os.path.join(tel.out_dir, "trace.json")]) == 0
+    events, _ = load_events(tel.out_dir)
+    runtimes = {e.get("runtime") for e in events if e.get("kind") == "round"}
+    assert {"pgd", "sgd"} <= runtimes
+    for e in events:
+        if e.get("kind") == "round":
+            assert "suspicion" in e and "worker_keep" in e
+            assert e["byzantine_true"] == [0]
+
+
+# ----------------------------------------------- soft keep (satellite)
+
+
+def test_trimmed_mean_soft_keep_exposes_fully_trimmed_worker():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api.aggregators import make_aggregator
+    from repro.telemetry import rejected_from_keep
+
+    u = jnp.array(np.random.default_rng(0).normal(size=(5, 16)),
+                  jnp.float32)
+    u = u.at[0].set(1e6)  # largest in every coordinate → always trimmed
+    for spec in ("trimmed_mean:0.2", "trimmed_mean_kernel:0.2"):
+        agg, keep = make_aggregator(spec)(u)
+        keep = np.asarray(keep)
+        assert keep[0] == 0.0
+        assert 0.0 < keep[1:].min() and keep.max() <= 1.0
+        assert rejected_from_keep(keep) == [0]
+    agg, keep = make_aggregator("coordinate_median")(u)
+    keep = np.asarray(keep)
+    assert keep[0] == 0.0 and keep[1:].sum() > 0
+
+
+def test_staleness_weighting_binarizes_soft_keep():
+    """A soft keep is forensic signal, not an aggregation weight: only
+    fully rejected arrivals are excluded from the async center mean."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api.aggregators import make_aggregator
+    from repro.async_rt.aggregate import StalenessWeighted
+
+    u = jnp.array(np.random.default_rng(1).normal(size=(5, 8)), jnp.float32)
+    u = u.at[0].set(1e6)
+    sw = StalenessWeighted(make_aggregator("trimmed_mean:0.2"), decay=1.0)
+    agg, keep = sw(u, [0] * 5)
+    np.testing.assert_allclose(np.asarray(agg),
+                               np.asarray(u[1:].mean(0)), rtol=1e-6)
+
+
+# ------------------------------------------------------- bench ledger
+
+
+def _fake_results():
+    return {
+        "table1": [{"attack": "gaussian", "alpha": 0.2,
+                    "newton_rounds": 7, "pgd_rounds": 40,
+                    "newton_uplink_bits": 1000,
+                    "newton_downlink_bits": 500, "speedup": 5.7}],
+        "bits_to_eps": [{"compressor": "topk:4",
+                         "bits_to_eps": {0.3: 2048, 0.1: None}}],
+        "topk_kernel_timing": [{"d": 1408, "kernel_us": 11.0,
+                                "xla_topk_us": 25.0, "plan": "grid"}],
+    }
+
+
+def test_extract_scalars_classifies_and_skips_nones():
+    res = _fake_results()
+    t1 = extract_scalars("table1", res["table1"])
+    assert t1["gaussian.alpha=0.2.newton_uplink_bits"] == 1000
+    assert "gaussian.alpha=0.2.speedup" not in t1  # not a ledger class
+    be = extract_scalars("bits_to_eps", res["bits_to_eps"])
+    assert be == {"topk:4.bits@eps=0.3": 2048}  # None ε-miss dropped
+    assert extract_scalars("unknown_entry", {"x": 1}) == {}
+
+
+def test_bench_compare_passes_identical_and_fails_on_2x_bits(tmp_path):
+    meta = fingerprint()
+    assert set(meta) == {"git_sha", "jax", "jaxlib", "platform",
+                         "python", "timestamp_utc"}
+    base_dir, cur_dir = str(tmp_path / "base"), str(tmp_path / "cur")
+    for name, entry in _fake_results().items():
+        scalars = extract_scalars(name, entry)
+        if scalars:
+            append_ledger(base_dir, name, scalars, meta)
+            append_ledger(cur_dir, name, scalars, meta)
+
+    problems, warnings, n = compare_ledgers(cur_dir, base_dir)
+    assert problems == [] and n > 0
+    assert obsv_cli(["bench-compare", cur_dir, "--baseline", base_dir]) == 0
+
+    # inject a 2× wire regression into the current table1 ledger
+    path = os.path.join(cur_dir, "BENCH_table1.json")
+    with open(path) as f:
+        records = json.load(f)
+    for k in records[-1]["scalars"]:
+        if "bits" in k:
+            records[-1]["scalars"][k] *= 2
+    with open(path, "w") as f:
+        json.dump(records, f)
+    problems, _, _ = compare_ledgers(cur_dir, base_dir)
+    assert any("REGRESSION" in p for p in problems)
+    assert obsv_cli(["bench-compare", cur_dir, "--baseline", base_dir]) == 1
+
+
+def test_bench_compare_times_skipped_unless_asked(tmp_path):
+    meta = fingerprint()
+    base_dir, cur_dir = str(tmp_path / "b"), str(tmp_path / "c")
+    append_ledger(base_dir, "topk_kernel_timing",
+                  {"d=1408.kernel_us": 10.0}, meta)
+    append_ledger(cur_dir, "topk_kernel_timing",
+                  {"d=1408.kernel_us": 1000.0}, meta)
+    problems, _, n = compare_ledgers(cur_dir, base_dir)
+    assert problems == [] and n == 0          # times not gated by default
+    problems, _, n = compare_ledgers(cur_dir, base_dir, check_times=True)
+    assert len(problems) == 1 and n == 1      # 100× > the 5× time ratio
+
+
+def test_bench_ledger_appends_and_missing_is_warning(tmp_path):
+    meta = fingerprint()
+    d = str(tmp_path / "led")
+    p1 = append_ledger(d, "table1", {"a_bits": 1}, meta)
+    append_ledger(d, "table1", {"a_bits": 2}, meta)
+    with open(p1) as f:
+        records = json.load(f)
+    assert [r["scalars"]["a_bits"] for r in records] == [1, 2]
+    # baseline has an entry the current run lacks → warning, not failure
+    cur = str(tmp_path / "cur")
+    os.makedirs(cur)
+    problems, warnings, _ = compare_ledgers(cur, d)
+    assert problems == [] and len(warnings) == 1
+    problems, _, _ = compare_ledgers(cur, d, strict=True)
+    assert len(problems) == 1

@@ -386,20 +386,46 @@ def test_round_record_dense_path_fields(tel):
 
 
 def test_schema_v2_validator_coverage():
-    """v1/v2 events stay valid forever; v2 field constraints enforced;
-    unknown versions rejected."""
+    """v1-v3 events stay valid forever; per-version field constraints
+    enforced; unknown versions rejected."""
     from repro.telemetry.schema import ACCEPTED_VERSIONS, SCHEMA_VERSION
 
-    assert SCHEMA_VERSION == 3 and ACCEPTED_VERSIONS == (1, 2, 3)
+    assert SCHEMA_VERSION == 4 and ACCEPTED_VERSIONS == (1, 2, 3, 4)
     base = {"kind": "round", "name": "newton.round", "ts": 0.1,
             "wall": 1.0, "step": 0}
     assert validate_event({**base, "v": 1}) == []          # v1 round: valid
     assert validate_event({**base, "v": 2, "center_bytes": 128,
                            "agg_kernel": "sparse"}) == []
-    assert validate_event({**base, "v": 4})                # unknown version
+    assert validate_event({**base, "v": 5})                # unknown version
     assert any("agg_kernel" in p for p in
                validate_event({**base, "v": 2, "agg_kernel": "vectorized"}))
     assert any("center_bytes" in p for p in
                validate_event({**base, "v": 2, "center_bytes": -4}))
     assert any("center_bytes" in p for p in
                validate_event({**base, "v": 2, "center_bytes": 3.5}))
+
+
+def test_schema_v4_worker_field_validation():
+    """The per-worker forensic lists: typed entries, null participation
+    holes where allowed, suspicion clamped to [0, 1]."""
+    base = {"kind": "round", "name": "newton.round", "ts": 0.1,
+            "wall": 1.0, "step": 0, "v": 4}
+    ok = {**base, "worker_bits": [64, 0], "worker_delta": [0.9, None],
+          "worker_keep": [1.0, None], "worker_norms": [0.5, None],
+          "worker_staleness": [0, None], "suspicion": [0.0, 1.0],
+          "byzantine_true": [0]}
+    assert validate_event(ok) == []
+    assert any("worker_bits" in p for p in
+               validate_event({**base, "worker_bits": [-1]}))
+    assert any("worker_bits" in p for p in
+               validate_event({**base, "worker_bits": [None]}))
+    assert any("suspicion" in p for p in
+               validate_event({**base, "suspicion": [1.5]}))
+    assert any("suspicion" in p for p in
+               validate_event({**base, "suspicion": [None]}))
+    assert any("byzantine_true" in p for p in
+               validate_event({**base, "byzantine_true": [0.5]}))
+    assert any("worker_staleness" in p for p in
+               validate_event({**base, "worker_staleness": [1.5]}))
+    assert any("worker_keep" in p for p in
+               validate_event({**base, "worker_keep": "all"}))
